@@ -1,0 +1,59 @@
+"""Kernel benchmarks: Pallas (interpret-mode correctness cost) + jitted
+oracle wall times per shape — the §3.1 computational-kernel analogue.
+
+On this CPU container the meaningful numbers are the jnp-oracle wall times
+(the compute layer DFPA actually measures here) and the kernels' VMEM
+working-set accounting for the TPU target; Pallas wall-clock belongs to
+real-TPU runs.
+"""
+
+from __future__ import annotations
+
+import io
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def kernels_bench() -> str:
+    out = io.StringIO()
+    out.write("kernel,shape,host_us_per_call,vmem_working_set_kb\n")
+    key = jax.random.PRNGKey(0)
+
+    mm = jax.jit(ref.matmul_update_ref)
+    for M, N, K, bm, bn, bk in [(256, 256, 512, 128, 128, 256), (512, 512, 1024, 256, 256, 512)]:
+        a = jax.random.normal(key, (M, K), jnp.float32)
+        b = jax.random.normal(key, (K, N), jnp.float32)
+        c = jnp.zeros((M, N), jnp.float32)
+        t = _time(mm, c, a, b)
+        vmem = (bm * bk + bk * bn + 2 * bm * bn) * 4 / 1024
+        out.write(f"matmul_update,{M}x{N}x{K},{t * 1e6:.0f},{vmem:.0f}\n")
+
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    for B, H, S, D, bq, bk_ in [(1, 4, 512, 64, 256, 256), (2, 8, 1024, 128, 256, 256)]:
+        q = jax.random.normal(key, (B, H, S, D), jnp.float32) * 0.1
+        k = jax.random.normal(key, (B, H, S, D), jnp.float32) * 0.1
+        v = jax.random.normal(key, (B, H, S, D), jnp.float32)
+        t = _time(fa, q, k, v)
+        vmem = (bq * D + 2 * bk_ * D + bq * bk_ + 2 * bq + bq * D) * 4 / 1024
+        out.write(f"flash_attention,B{B}H{H}S{S}D{D},{t * 1e6:.0f},{vmem:.0f}\n")
+
+    rg = jax.jit(ref.rglru_scan_ref)
+    for B, S, D, bs, bd in [(2, 1024, 512, 256, 512), (4, 2048, 1024, 256, 512)]:
+        la = -jax.nn.softplus(jax.random.normal(key, (B, S, D)))
+        b = 0.1 * jax.random.normal(key, (B, S, D))
+        t = _time(rg, la, b)
+        vmem = (3 * bs * bd + bd) * 4 / 1024
+        out.write(f"rglru_scan,B{B}S{S}D{D},{t * 1e6:.0f},{vmem:.0f}\n")
+    return out.getvalue()

@@ -1,0 +1,63 @@
+"""Roofline reporter: reads the dry-run JSONs and renders the §Roofline
+table (per arch x shape, single-pod): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS, achievable-MFU bound, per-device memory, and the
+what-would-move-it-down note."""
+
+from __future__ import annotations
+
+import glob
+import io
+import json
+import os
+
+PEAK = 197e12
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+_NOTES = {
+    ("compute_s", "train"): "raise arithmetic intensity: fuse attention (Pallas flash kernel) and cut remat recompute via selective policies",
+    ("compute_s", "prefill"): "flash-attention kernel (fused softmax) removes the quadratic-logit flops overhead",
+    ("compute_s", "decode"): "batch more requests per step; absorbed/fused decode kernels",
+    ("memory_s", "train"): "fuse elementwise chains (norms/gates) into matmuls; larger microbatch per device once resident allows; Pallas kernels keep working sets in VMEM",
+    ("memory_s", "prefill"): "flash-attention kernel avoids writing logits to HBM — the dominant stream at 32k",
+    ("memory_s", "decode"): "decode is KV-bandwidth bound by nature: quantize the cache (int8 KV) or shrink it (MLA-style latent caches)",
+    ("collective_s", "train"): "overlap FSDP gathers with compute (XLA latency-hiding scheduler on TPU); cut refetch by lowering train_accum; int8 gradient compression on the DCN axis",
+    ("collective_s", "prefill"): "keep heads sharded end-to-end to avoid resharding; ring-attention for the KV all-gathers",
+    ("collective_s", "decode"): "seq-sharded cache psum is already minimal; co-locate sampling to avoid logit gathers",
+}
+
+
+def _kind(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(shape, "decode")
+
+
+def roofline_table(dryrun_dir: str = "experiments/dryrun") -> str:
+    recs = []
+    for path in glob.glob(os.path.join(dryrun_dir, "*_single.json")):
+        with open(path) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = io.StringIO()
+    out.write(
+        "arch,shape,status,compute_ms,memory_ms,collective_ms,dominant,"
+        "useful_flops_ratio,mfu_bound,resident_GiB,fits_hbm,note\n"
+    )
+    for r in recs:
+        if r["status"] != "ok" or "terms" not in r:
+            out.write(
+                f"{r['arch']},{r['shape']},{r['status']},,,,,,,,,"
+                f"{r.get('reason', r.get('error', ''))[:70]}\n"
+            )
+            continue
+        t = r["terms"]
+        bound_s = max(t.values())
+        mfu = r["model_flops_per_dev"] / (bound_s * PEAK) if bound_s > 0 else 0.0
+        note = _NOTES.get((r["dominant"], _kind(r["shape"])), "")
+        out.write(
+            f"{r['arch']},{r['shape']},ok,"
+            f"{t['compute_s'] * 1e3:.2f},{t['memory_s'] * 1e3:.2f},"
+            f"{t['collective_s'] * 1e3:.2f},{r['dominant'].replace('_s', '')},"
+            f"{r['useful_flops_ratio']:.3f},{mfu:.3f},"
+            f"{r['mem']['resident_bytes'] / 2**30:.2f},{r['fits_hbm']},\"{note}\"\n"
+        )
+    return out.getvalue()

@@ -1,0 +1,55 @@
+"""DFPA-balanced serving dispatch + elastic replica membership.
+
+A fleet of heterogeneous serving replicas (nonlinear throughput vs load:
+the FPM of serving).  DFPA splits request chunks; a replica joins mid-run
+and the dispatcher warm-rebalances.  Also runs a REAL greedy generation on
+the smoke model to show the engine behind each replica.
+
+    PYTHONPATH=src python examples/elastic_serve.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import imbalance
+from repro.nn.params import init_tree
+from repro.runtime.elastic import elastic_rebalance
+from repro.runtime.balance import BalanceController
+from repro.runtime.serve_loop import ReplicaDispatcher, ServeEngine
+from repro.runtime.train_loop import model_spec_for
+
+# --- 1. a real engine: prefill + greedy decode on the smoke model ---------
+cfg = get_smoke_config("stablelm-12b")
+params = init_tree(jax.random.PRNGKey(0), model_spec_for(cfg))
+engine = ServeEngine(cfg, params, batch=2, seq_budget=48)
+prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+out = engine.generate(prompt, max_new=16)
+print(f"engine: generated {out.shape[1]} tokens/request; sample {np.asarray(out[0][:8])}")
+
+# --- 2. DFPA dispatch across 4 heterogeneous replicas ----------------------
+rng = np.random.default_rng(0)
+base = rng.uniform(2e-4, 8e-4, 5)
+knee = rng.integers(20, 48, 5)
+
+
+def replica_run(i, x):
+    t = x * base[i]
+    if x > knee[i]:
+        t += (x - knee[i]) * base[i] * 4.0  # HBM-spill knee
+    return t
+
+
+disp = ReplicaDispatcher(replica_run, 4, eps=0.1)
+res = disp.balance(96)
+print(f"\n4 replicas: d={res.d} iters={res.iterations} imb={res.imbalance:.3f}")
+
+# --- 3. elastic join: replica 5 arrives; warm rebalance ---------------------
+ctrl = BalanceController(n_units=96, num_groups=4, eps=0.1, models=res.models, d=list(res.d))
+ctrl5 = elastic_rebalance(ctrl, surviving=[0, 1, 2, 3], joined=1)
+for _ in range(6):
+    times = [replica_run(i, d) for i, d in enumerate(ctrl5.d)]
+    ctrl5.observe(times)
+times = [replica_run(i, d) for i, d in enumerate(ctrl5.d)]
+print(f"after join: d={ctrl5.d} imb={imbalance([t for t in times if t > 0]):.3f}")
+print("the newcomer was folded in from a donor estimate — no cold restart.")

@@ -1,0 +1,67 @@
+"""Heterogeneous LM training with ONLINE DFPA rebalancing + straggler
+detection + an elastic group loss — the framework's production story in
+miniature (real jit'd training steps; group heterogeneity emulated by
+deterministic per-group slowdowns).
+
+    PYTHONPATH=src python examples/hetero_train.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMData, UnitBatcher
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.balance import BalanceController
+from repro.runtime.elastic import elastic_rebalance
+from repro.runtime.straggler import StragglerAction, StragglerDetector
+from repro.runtime.train_loop import init_train_state, make_train_step
+
+CFG = get_smoke_config("granite-20b")
+GROUPS, UNITS, STEPS = 4, 16, 14
+HETERO = [1.0, 1.3, 2.0, 3.5]  # per-group slowdown factors (unknown to DFPA)
+
+state = init_train_state(CFG, jax.random.PRNGKey(0))
+sched = warmup_cosine(3e-3, 2, STEPS)
+data = SyntheticLMData(CFG, batch=2, seq=32)
+batcher = UnitBatcher(data, micro_batch=2)
+ctrl = BalanceController(n_units=UNITS, num_groups=GROUPS, eps=0.15, smooth=1.0)
+det = StragglerDetector(factor=1.6, patience=2, patience_hard=5)
+step_fns = {}
+
+print(f"groups={GROUPS} hetero={HETERO} units/step={UNITS}")
+for step in range(STEPS):
+    if step == 9:  # elastic event: group 3 (slowest) leaves the fleet
+        ctrl = elastic_rebalance(ctrl, surviving=[0, 1, 2])
+        HETERO = HETERO[:3]
+        print(">>> elastic: group 3 left; warm-started DFPA re-partition")
+    units = batcher.global_step_units(ctrl.n_units, step)
+    parts = batcher.split(units, ctrl.d)
+    times, loss = [], float("nan")
+    for g, part in enumerate(parts):
+        a = ctrl.d[g]
+        if a == 0:
+            times.append(0.0)
+            continue
+        if a not in step_fns:
+            step_fns[a] = jax.jit(make_train_step(CFG, sched, accum_steps=a))
+        gb = {k: jnp.asarray(v) for k, v in part.items()}
+        new_state, metrics = step_fns[a](state, gb)
+        times.append(a * 0.01 * HETERO[g])  # emulated wall time
+        if g == 0:
+            state, loss = new_state, float(metrics["loss"])
+    for g in range(ctrl.num_groups):
+        act = det.update(g, ctrl.models[g], ctrl.d[g], times[g])
+        if act is not StragglerAction.NONE:
+            print(f"    straggler[{g}]: {act.value}")
+            if act is StragglerAction.REPROFILE:
+                det.reprofile(ctrl, g)
+    changed = ctrl.observe(times)
+    print(
+        f"step {step:2d} loss {loss:7.4f} d={ctrl.d}"
+        + ("  <- rebalanced" if changed else "")
+    )
+print(f"\nfinal distribution {ctrl.d}")
+print("slow groups ended with fewer microbatches — the paper's partitioning,")
+print("driven by training-step times instead of benchmark rounds.")

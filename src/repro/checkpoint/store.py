@@ -1,0 +1,181 @@
+"""Atomic, async, resharding checkpoints.
+
+Design for 1000+ node fleets (DESIGN.md §3):
+
+  * ATOMIC   — write to ``<dir>/tmp.<step>``, fsync, then ``os.replace`` to
+    ``<dir>/step_<n>``; a crash mid-write can never corrupt the latest good
+    checkpoint; ``latest`` symlink updated last.
+  * ASYNC    — ``CheckpointManager.save_async`` snapshots to host memory
+    (device_get) synchronously (cheap) and writes in a background thread, so
+    training resumes immediately; ``wait()`` joins before the next save.
+  * RESHARD  — restore takes the *current* mesh/shardings and device_puts
+    each tensor to its new layout: restarting on a different device count
+    (elastic restart) is the normal path, not a special case.
+  * MANIFEST — JSON with step, config name, mesh shape, data-pipeline state,
+    and the flattened tree paths, so a restore can validate compatibility
+    before touching any tensor data.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    *,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    tmp = os.path.join(directory, f"tmp.{step}")
+    final = os.path.join(directory, f"step_{step:010d}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        import shutil
+
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # update 'latest' pointer last (atomic symlink swap)
+    link = os.path.join(directory, "latest")
+    tmp_link = os.path.join(directory, ".latest.tmp")
+    if os.path.lexists(tmp_link):
+        os.remove(tmp_link)
+    os.symlink(os.path.basename(final), tmp_link)
+    os.replace(tmp_link, link)
+    return final
+
+
+def load_checkpoint(
+    directory: str,
+    like: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings`` (same structure) re-shards each tensor
+    to the CURRENT mesh — the elastic-restart path.  Returns (tree, manifest).
+    """
+    if step is None:
+        path = os.path.join(directory, "latest")
+        if not os.path.exists(path):
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+        path = os.path.realpath(path)
+    else:
+        path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        _SEP.join(_path_str(p) for p in pth)
+        for pth, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    missing = [k for k in paths if k not in data]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}... ({len(missing)})")
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * len(paths)
+    )
+    out = []
+    for key, leaf_like, shd in zip(paths, leaves_like, shard_leaves):
+        arr = data[key]
+        want_dtype = getattr(leaf_like, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        if shd is not None:
+            out.append(jax.device_put(arr, shd))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest
+
+
+class CheckpointManager:
+    """Async wrapper with retention: keeps the last ``keep`` checkpoints."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save_async(self, step: int, tree: Any, *, extra=None) -> None:
+        self.wait()
+        host_tree = jax.device_get(tree)  # snapshot before training continues
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.directory):
+            return
+        steps = sorted(
+            d for d in os.listdir(self.directory) if d.startswith("step_")
+        )
+        for d in steps[: -self.keep] if self.keep > 0 else []:
+            import shutil
+
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+
+    def latest_step(self) -> Optional[int]:
+        link = os.path.join(self.directory, "latest")
+        if not os.path.exists(link):
+            return None
+        return int(os.path.basename(os.path.realpath(link)).split("_")[1])

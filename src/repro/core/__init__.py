@@ -1,0 +1,60 @@
+"""The paper's contribution: FPMs, the geometric partitioner of [16], DFPA,
+the nested 2-D variant, and the calibrated heterogeneous-cluster simulator."""
+
+from .dfpa import DFPAResult, dfpa
+from .executor import CallableExecutor, Executor, RoundLog, SimulatedExecutor
+from .fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, SpeedModel, imbalance
+from .partition import cpm_partition, partition_continuous, partition_units
+from .partition2d import (
+    Grid2DResult,
+    app_time_2d,
+    cpm_partition_2d,
+    dfpa_partition_2d,
+    ffmpa_partition_2d,
+)
+from .simulator import (
+    HCL_SPECS,
+    NodeSpec,
+    full_model_build_cost,
+    make_grid5000_specs,
+    make_grid5000_time_fns,
+    make_hcl_time_fns,
+    make_tpu_group_time_fns,
+    matmul_app_time_1d,
+    speed_fn_1d,
+    speed_fn_2d,
+    time_fn_1d,
+)
+
+__all__ = [
+    "AnalyticModel",
+    "CallableExecutor",
+    "ConstantModel",
+    "DFPAResult",
+    "Executor",
+    "Grid2DResult",
+    "HCL_SPECS",
+    "NodeSpec",
+    "PiecewiseLinearFPM",
+    "RoundLog",
+    "SimulatedExecutor",
+    "SpeedModel",
+    "app_time_2d",
+    "cpm_partition",
+    "cpm_partition_2d",
+    "dfpa",
+    "dfpa_partition_2d",
+    "ffmpa_partition_2d",
+    "full_model_build_cost",
+    "imbalance",
+    "make_grid5000_specs",
+    "make_grid5000_time_fns",
+    "make_hcl_time_fns",
+    "make_tpu_group_time_fns",
+    "matmul_app_time_1d",
+    "partition_continuous",
+    "partition_units",
+    "speed_fn_1d",
+    "speed_fn_2d",
+    "time_fn_1d",
+]

@@ -1,0 +1,168 @@
+"""The paper's contribution: Distributed Functional Partitioning Algorithm.
+
+DFPA balances ``n`` equal computation units across ``p`` processors whose
+speed functions are *unknown a priori*, to relative accuracy ``eps``:
+
+  1. run the even distribution ``n/p`` everywhere, gather times;
+  2. if ``max_{i,j} |t_i - t_j|/t_i <= eps`` -> done;
+  3. else turn observations into (partial, piecewise-linear) FPM estimates;
+  4. re-partition optimally *for the current estimates* (algorithm [16],
+     see ``partition.py``), execute the new distribution, measure;
+  5. accumulate the new points into the estimates; goto 4.
+
+Extras beyond the bare paper loop (all flagged, all default-compatible):
+
+* ``warm_models`` — start from surviving FPM estimates instead of the even
+  distribution (elastic restarts re-use points, the paper's §3.2 trick of
+  reusing "the results of all previous benchmarks");
+* fixed-point escape by LOCAL PROBING: with a deterministic executor,
+  re-running an already-measured distribution cannot improve the estimates,
+  so when the partitioner repeats itself short of eps, DFPA probes a 1-unit
+  perturbation (slowest processor donates to the fastest) — the new point
+  sharpens the piecewise-linear estimate exactly around the operating point
+  and re-launches progress.  (The paper's real cluster gets fresh
+  information from every repeat via measurement noise; the probe recovers
+  the same effect deterministically.)  If no unseen neighbour exists, DFPA
+  stops and reports the best measured round;
+* ``min_units`` — keep every processor participating (the matrix apps do).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .executor import Executor
+from .fpm import PiecewiseLinearFPM, imbalance
+from .partition import partition_units
+
+__all__ = ["DFPAResult", "dfpa"]
+
+
+@dataclass
+class DFPAResult:
+    d: List[int]  # final distribution (the paper's output array d)
+    times: List[float]  # execution times observed for d (the output array t)
+    iterations: int  # number of parallel rounds executed
+    converged: bool  # eps test passed (False -> fixed-point/max_iter stop)
+    imbalance: float  # final max |t_i - t_j| / t_i
+    models: List[PiecewiseLinearFPM]  # the partial FPM estimates built
+    history: List[Tuple[List[int], List[float]]] = field(default_factory=list)
+
+    @property
+    def points_per_proc(self) -> List[int]:
+        return [m.num_points for m in self.models]
+
+
+def _even(n: int, p: int) -> List[int]:
+    base, rem = divmod(n, p)
+    return [base + (1 if i < rem else 0) for i in range(p)]
+
+
+def dfpa(
+    executor: Executor,
+    n: int,
+    eps: float,
+    *,
+    max_iter: int = 100,
+    caps: Optional[Sequence[int]] = None,
+    min_units: int = 0,
+    warm_models: Optional[Sequence[PiecewiseLinearFPM]] = None,
+    warm_start_d: Optional[Sequence[int]] = None,
+    probe_budget: Optional[int] = None,
+) -> DFPAResult:
+    """Run DFPA over ``executor``; see module docstring."""
+    p = executor.num_procs
+    if p < 1:
+        raise ValueError("need at least one processor")
+    if n < p:
+        raise ValueError(f"DFPA requires n >= p (n={n}, p={p})")
+    if eps <= 0:
+        raise ValueError("eps must be positive")
+
+    models: List[PiecewiseLinearFPM] = (
+        [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm_models]
+        if warm_models is not None
+        else [PiecewiseLinearFPM() for _ in range(p)]
+    )
+
+    history: List[Tuple[List[int], List[float]]] = []
+    seen: Dict[Tuple[int, ...], List[float]] = {}
+    if probe_budget is None:
+        probe_budget = 2 * p
+    probes_left = probe_budget
+
+    def measure(d: List[int]) -> List[float]:
+        times = executor.run(d)
+        history.append((list(d), list(times)))
+        seen[tuple(d)] = list(times)
+        for i, (di, ti) in enumerate(zip(d, times)):
+            if di > 0 and ti > 0:
+                models[i].add_point(float(di), di / ti)  # s_i(d_i) = d_i / t_i
+        return list(times)
+
+    # Step 1: initial distribution — even split (paper), or the warm-start
+    # partition when prior estimates exist (elastic restart path).
+    if warm_start_d is not None:
+        d = list(map(int, warm_start_d))
+        if sum(d) != n or len(d) != p:
+            raise ValueError("warm_start_d must be a length-p partition of n")
+    elif warm_models is not None and all(m.num_points > 0 for m in models):
+        d = partition_units(models, n, caps, min_units=min_units)
+    else:
+        d = _even(n, p)
+    times = measure(d)
+    it = 1
+
+    best_d, best_t, best_imb = list(d), list(times), imbalance(times)
+
+    while True:
+        imb = imbalance(times)
+        if imb < best_imb:
+            best_d, best_t, best_imb = list(d), list(times), imb
+        if imb <= eps:
+            return DFPAResult(list(d), list(times), it, True, imb, models, history)
+        if it >= max_iter:
+            return DFPAResult(best_d, best_t, it, False, best_imb, models, history)
+        # Steps 3+5: models already updated inside measure(); step 4: re-partition.
+        d_new = partition_units(models, n, caps, min_units=min_units)
+        if tuple(d_new) in seen:
+            t_seen = seen[tuple(d_new)]
+            imb_seen = imbalance(t_seen)
+            if imb_seen < best_imb:
+                best_d, best_t, best_imb = list(d_new), list(t_seen), imb_seen
+            probe = (
+                _probe_neighbour(d_new, t_seen, seen, caps, min_units)
+                if probes_left > 0
+                else None
+            )
+            if probe is None:
+                return DFPAResult(
+                    best_d, best_t, it, best_imb <= eps, best_imb, models, history
+                )
+            probes_left -= 1
+            d_new = probe
+        d = d_new
+        times = measure(d)
+        it += 1
+
+
+def _probe_neighbour(d, times, seen, caps, min_units):
+    """First unseen 1-unit transfer from slower to faster processors."""
+    p = len(d)
+    order_slow = sorted(range(p), key=lambda i: times[i], reverse=True)
+    order_fast = sorted(range(p), key=lambda i: times[i])
+    for i in order_slow:
+        if d[i] - 1 < min_units:
+            continue
+        for j in order_fast:
+            if i == j:
+                continue
+            if caps is not None and d[j] + 1 > caps[j]:
+                continue
+            cand = list(d)
+            cand[i] -= 1
+            cand[j] += 1
+            if tuple(cand) not in seen:
+                return cand
+    return None

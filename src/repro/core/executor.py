@@ -1,0 +1,120 @@
+"""Executor protocol: how DFPA runs a distribution and observes times.
+
+The paper's algorithm is distributed — step 4 executes ``d_i`` computation
+units on every processor *in parallel* and gathers the times on P1.  The
+framework abstracts that behind ``Executor.run(d) -> times`` so the same DFPA
+loop drives:
+
+* ``SimulatedExecutor``   — a cluster simulator (benchmarks, tests);
+* ``CallableExecutor``    — real wall-clock timing of per-processor callables
+  (used with the Pallas/jnp matmul kernels on the host);
+* group executors in ``runtime/balance.py`` — per-group jit'd train steps.
+
+``run`` returns *per-processor execution times* for one parallel round; the
+round's wall-clock cost is ``max(times)`` plus the collective overhead the
+executor models (the paper's gather/scatter of times/allocations).
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from typing import Callable, List, Protocol, Sequence
+
+__all__ = ["Executor", "SimulatedExecutor", "CallableExecutor", "RoundLog"]
+
+
+@dataclass
+class RoundLog:
+    """One DFPA round: the distribution sent out and the times gathered."""
+
+    d: List[int]
+    times: List[float]
+    wall_cost: float  # max(times) + modelled collective overhead
+
+
+class Executor(Protocol):
+    @property
+    def num_procs(self) -> int: ...
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        """Execute ``d[i]`` units on processor ``i`` in parallel; return times."""
+        ...
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        """Wall-clock cost of one parallel round (incl. collectives)."""
+        ...
+
+
+@dataclass
+class SimulatedExecutor:
+    """Drives DFPA against ground-truth time functions ``time_fns[i](x)``.
+
+    ``collective_overhead(p)`` models the paper's gather of ``p`` times +
+    scatter of ``p`` allocations (latency + per-rank term); ``noise`` optionally
+    perturbs observations (multiplicative, reproducible via ``rng``).
+    """
+
+    time_fns: Sequence[Callable[[float], float]]
+    alpha: float = 1e-4  # collective latency (s)
+    beta: float = 1e-6  # per-rank cost (s)
+    noise: float = 0.0
+    rng: object = None  # numpy Generator when noise > 0
+    logs: List[RoundLog] = field(default_factory=list)
+
+    @property
+    def num_procs(self) -> int:
+        return len(self.time_fns)
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        times = []
+        for i, di in enumerate(d):
+            t = float(self.time_fns[i](float(di))) if di > 0 else 0.0
+            if self.noise > 0.0 and self.rng is not None and di > 0:
+                t *= 1.0 + self.noise * float(self.rng.standard_normal())
+                t = max(t, 1e-12)
+            times.append(t)
+        self.logs.append(RoundLog(list(map(int, d)), times, self.round_cost(times)))
+        return times
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times) + self.alpha + self.beta * self.num_procs
+
+    @property
+    def total_cost(self) -> float:
+        return sum(l.wall_cost for l in self.logs)
+
+
+@dataclass
+class CallableExecutor:
+    """Times real per-processor kernels ``fns[i](x)`` with the host clock.
+
+    On a single host the "parallel" round is executed sequentially but costed
+    as ``max(times)`` — the quantity the paper's parallel rounds expose.
+    """
+
+    fns: Sequence[Callable[[int], None]]
+    logs: List[RoundLog] = field(default_factory=list)
+
+    @property
+    def num_procs(self) -> int:
+        return len(self.fns)
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        times = []
+        for i, di in enumerate(d):
+            if di <= 0:
+                times.append(0.0)
+                continue
+            t0 = _time.perf_counter()
+            self.fns[i](int(di))
+            times.append(_time.perf_counter() - t0)
+        self.logs.append(RoundLog(list(map(int, d)), times, self.round_cost(times)))
+        return times
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times)
+
+    @property
+    def total_cost(self) -> float:
+        return sum(l.wall_cost for l in self.logs)

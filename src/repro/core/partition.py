@@ -1,0 +1,150 @@
+"""Data-partitioning algorithms over performance models.
+
+Implements the building blocks the paper composes:
+
+* ``partition_continuous`` — the geometric algorithm of [16] (Lastovetsky &
+  Reddy, IJHPCA 2007): the optimal allocations ``x_i`` lie on a straight line
+  through the origin of the (size, speed) plane, i.e. all processors finish at
+  the same time ``t* = x_i / s_i(x_i)``.  We find the smallest ``t`` such that
+  ``sum_i alloc_i(t) >= n`` by bisection; ``alloc_i(t) = max{x <= cap_i :
+  x/s_i(x) <= t}`` is supplied by the model (monotone in ``t`` by construction,
+  so bisection is exact regardless of the shape of the speed estimate).
+
+* ``partition_units`` — the integer version used by DFPA: continuous solution,
+  floor, then a greedy min-makespan completion (each leftover unit goes to the
+  processor whose completion time after receiving it is smallest).  This is the
+  "distribution of computation units" the paper's step 3 sends out.
+
+* ``cpm_partition`` — the conventional constant-performance-model distribution
+  (speed constants, proportional allocation), the paper's baseline.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+from .fpm import ConstantModel, SpeedModel
+
+__all__ = [
+    "partition_continuous",
+    "partition_units",
+    "cpm_partition",
+]
+
+
+def _total_alloc(models: Sequence[SpeedModel], t: float, caps: Sequence[float]) -> float:
+    return sum(m.alloc_at_time(t, c) for m, c in zip(models, caps))
+
+
+def partition_continuous(
+    models: Sequence[SpeedModel],
+    n: float,
+    caps: Optional[Sequence[float]] = None,
+    *,
+    rel_tol: float = 1e-12,
+    max_steps: int = 200,
+) -> Tuple[List[float], float]:
+    """Continuous optimal partition of ``n`` units across ``models``.
+
+    Returns ``(allocations, t_star)``.  ``caps`` bounds per-processor
+    allocation (memory limits); infeasible caps raise ``ValueError``.
+    """
+    p = len(models)
+    if p == 0:
+        raise ValueError("no processors")
+    if n <= 0:
+        return [0.0] * p, 0.0
+    caps = list(caps) if caps is not None else [float(n)] * p
+    caps = [min(float(c), float(n)) for c in caps]
+    if sum(caps) < n:
+        raise ValueError(f"infeasible: sum(caps)={sum(caps)} < n={n}")
+
+    # Exponential search for an upper bound on t*.
+    hi = max(m.time(min(1.0, c)) for m, c in zip(models, caps) if c > 0)
+    hi = max(hi, 1e-9)
+    for _ in range(200):
+        if _total_alloc(models, hi, caps) >= n:
+            break
+        hi *= 2.0
+    else:  # pragma: no cover - guarded by the feasibility check above
+        raise RuntimeError("could not bracket t*")
+    lo = 0.0
+    # Bisection: invariant total(lo) < n <= total(hi).
+    for _ in range(max_steps):
+        mid = 0.5 * (lo + hi)
+        if _total_alloc(models, mid, caps) >= n:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo <= rel_tol * hi:
+            break
+    t_star = hi
+    xs = [m.alloc_at_time(t_star, c) for m, c in zip(models, caps)]
+    total = sum(xs)
+    if total > 0:
+        # alloc_at_time(t_star) may slightly overshoot n; rescale the excess
+        # proportionally so the continuous solution sums exactly to n.
+        excess = total - n
+        if excess > 0:
+            xs = [x - excess * (x / total) for x in xs]
+    return xs, t_star
+
+
+def partition_units(
+    models: Sequence[SpeedModel],
+    n: int,
+    caps: Optional[Sequence[int]] = None,
+    *,
+    min_units: int = 0,
+) -> List[int]:
+    """Integer partition of ``n`` equal computation units.
+
+    Continuous solution -> floor -> greedy min-makespan completion.  With
+    ``min_units > 0`` every processor receives at least that many units
+    (the paper's matrix apps keep every processor participating).
+    """
+    p = len(models)
+    if n < 0:
+        raise ValueError("n must be non-negative")
+    if min_units * p > n:
+        raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
+    icaps = [int(c) for c in caps] if caps is not None else [n] * p
+    fcaps = [float(c) for c in icaps]
+    xs, _ = partition_continuous(models, float(n), fcaps)
+    d = [max(min_units, int(math.floor(x))) for x in xs]
+    d = [min(di, ci) for di, ci in zip(d, icaps)]
+    leftover = n - sum(d)
+    if leftover < 0:
+        # min_units pushed us over n: take units back from the processors whose
+        # per-unit time is largest (removing from the slowest hurts least).
+        order = sorted(range(p), key=lambda i: models[i].time(d[i]) / max(d[i], 1), reverse=True)
+        k = 0
+        while leftover < 0:
+            i = order[k % p]
+            if d[i] > min_units:
+                d[i] -= 1
+                leftover += 1
+            k += 1
+    # Greedy completion: each leftover unit to the processor minimizing the
+    # resulting completion time (ties -> larger fractional remainder).
+    rem = [x - math.floor(x) for x in xs]
+    for _ in range(leftover):
+        best_i, best_key = -1, None
+        for i in range(p):
+            if d[i] + 1 > icaps[i]:
+                continue
+            key = (models[i].time(d[i] + 1), -rem[i])
+            if best_key is None or key < best_key:
+                best_i, best_key = i, key
+        if best_i < 0:
+            raise ValueError("caps infeasible during integer completion")
+        d[best_i] += 1
+    assert sum(d) == n
+    return d
+
+
+def cpm_partition(speeds: Sequence[float], n: int, caps: Optional[Sequence[int]] = None) -> List[int]:
+    """Conventional CPM distribution: proportional to constant speeds."""
+    models = [ConstantModel(s) for s in speeds]
+    return partition_units(models, n, caps)

@@ -1,0 +1,301 @@
+"""Nested 2-D partitioning (paper §3.2) + CPM / FFMPA baselines.
+
+The 2-D heterogeneous matmul distributes an ``M x N`` block matrix over a
+``p x q`` processor grid: column widths ``n_j`` (outer) and per-column row
+heights ``m_ij`` (inner).  The paper's DFPA-based algorithm:
+
+  1. start even: ``n_j = N/q``, ``m_ij = M/p``;
+  2. for each column j IN PARALLEL, run DFPA on the column's rows (this
+     *estimates a 1-D projection of the 2-D FPM* at width ``n_j``);
+  3. if the global imbalance <= eps -> done; else set
+     ``n_j ∝ sum_i s_ij(m_ij, n_j)`` (column width proportional to the
+     column's speed sum) and goto 2.
+
+Implementation includes the paper's cost optimizations (§3.2 last page):
+  * reuse all previous benchmark points (rescaled to the new column width);
+  * skip re-partitioning a column whose width changed by < ``width_tol``;
+  * warm-start each inner DFPA from the previous iteration's row heights.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from .dfpa import dfpa
+from .executor import SimulatedExecutor
+from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
+from .partition import cpm_partition, partition_units
+
+__all__ = [
+    "Grid2DResult",
+    "dfpa_partition_2d",
+    "cpm_partition_2d",
+    "ffmpa_partition_2d",
+    "app_time_2d",
+]
+
+SpeedFn2D = Callable[[float, float], float]  # g(m_b, n_b) -> units/s
+
+
+@dataclass
+class Grid2DResult:
+    col_widths: List[int]  # n_j, len q
+    row_heights: List[List[int]]  # m[j][i], q x p
+    outer_iterations: int
+    total_rounds: int  # total DFPA parallel rounds across all columns
+    bench_cost: float  # wall-clock spent benchmarking (parallel-round model)
+    converged: bool
+    imbalance: float
+    times: List[List[float]] = field(default_factory=list)  # t[j][i]
+
+
+def _col_times(
+    grid: Sequence[Sequence[SpeedFn2D]], j: int, widths: Sequence[int], rows: Sequence[int]
+) -> List[float]:
+    w = widths[j]
+    return [
+        (r * w) / grid[i][j](float(r), float(w)) if r > 0 else 0.0
+        for i, r in enumerate(rows)
+    ]
+
+
+def _flat_imbalance(times: List[List[float]]) -> float:
+    flat = [t for col in times for t in col if t > 0]
+    return imbalance(flat) if flat else 0.0
+
+
+def dfpa_partition_2d(
+    grid: Sequence[Sequence[SpeedFn2D]],
+    M: int,
+    N: int,
+    eps: float,
+    *,
+    max_outer: int = 40,
+    inner_max_iter: int = 15,
+    width_tol: float = 0.02,
+    min_units: int = 1,
+) -> Grid2DResult:
+    """DFPA-based nested 2-D partitioning over ground-truth speeds ``grid``.
+
+    ``grid[i][j]`` is the speed function of processor (i, j) of a p x q grid.
+    """
+    p, q = len(grid), len(grid[0])
+    widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
+    rows: List[Optional[List[int]]] = [None] * q  # warm-start rows per column
+    # FPM estimates per (i, j), in ROW units at the width they were observed;
+    # reused across widths by rescaling rows/s by (old_w / new_w).
+    fpms: List[List[PiecewiseLinearFPM]] = [[PiecewiseLinearFPM() for _ in range(q)] for _ in range(p)]
+    fpm_width: List[List[Optional[int]]] = [[None] * q for _ in range(p)]
+
+    total_rounds = 0
+    bench_cost = 0.0
+    times: List[List[float]] = [[0.0] * p for _ in range(q)]
+    prev_widths: Optional[List[int]] = None
+    best: Optional[Grid2DResult] = None
+
+    for outer in range(1, max_outer + 1):
+        col_round_costs = [0.0] * q
+        for j in range(q):
+            w = widths[j]
+            if (
+                prev_widths is not None
+                and rows[j] is not None
+                and w == prev_widths[j]
+            ):
+                # Paper's optimization: width unchanged -> keep the column's
+                # partition; no re-benchmark needed.
+                times[j] = _col_times(grid, j, widths, rows[j])
+                continue
+            # Rescale surviving FPM points to the new width (g ~ const in w).
+            warm = []
+            for i in range(p):
+                old_w = fpm_width[i][j]
+                if old_w is None or fpms[i][j].num_points == 0:
+                    warm = None
+                    break
+                scale = old_w / w
+                warm.append(
+                    PiecewiseLinearFPM.from_points(
+                        [(x, s * scale) for x, s in fpms[i][j].as_points()]
+                    )
+                )
+            ex = SimulatedExecutor(
+                time_fns=[
+                    (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
+                    for i in range(p)
+                ]
+            )
+            res = dfpa(
+                ex,
+                M,
+                eps,
+                max_iter=inner_max_iter,
+                min_units=min_units,
+                warm_models=warm,
+                warm_start_d=rows[j] if rows[j] is not None else None,
+                # Probe fixed points only on the COLD first partition of a
+                # column; warm refinements rely on the outer width update
+                # for fresh information — unbounded probing churned 2256
+                # rounds / 76% cost at M=N=768.
+                probe_budget=p if warm is None else 0,
+            )
+            rows[j] = list(res.d)
+            times[j] = list(res.times)
+            for i in range(p):
+                fpms[i][j] = res.models[i]
+                fpm_width[i][j] = w
+            total_rounds += res.iterations
+            col_round_costs[j] = ex.total_cost
+        # Columns run their inner DFPA in parallel -> cost = slowest column.
+        bench_cost += max(col_round_costs) if col_round_costs else 0.0
+
+        imb = _flat_imbalance(times)
+        snap = Grid2DResult(
+            list(widths), [list(r) for r in rows], outer, total_rounds,
+            bench_cost, imb <= eps, imb, [list(t) for t in times],
+        )
+        if best is None or imb < best.imbalance:
+            best = snap
+        if imb <= eps:
+            return snap
+
+        # Outer step (ii): columns' widths ∝ column speed sums (damped).
+        # Paper's freeze optimization: revert sub-tolerance width changes
+        # (skipping their columns' re-benchmark next round) and hand the
+        # residual to the columns that did move.
+        prev_widths = list(widths)
+        widths = _rebalance_widths(widths, times, rows, N)
+        moved = [j for j in range(q) if abs(widths[j] - prev_widths[j]) > width_tol * prev_widths[j]]
+        if moved and len(moved) < q:
+            for j in range(q):
+                if j not in moved:
+                    widths[j] = prev_widths[j]
+            diff = N - sum(widths)
+            k = 0
+            while diff != 0:
+                j = moved[k % len(moved)]
+                step = 1 if diff > 0 else -1
+                if widths[j] + step >= 1:
+                    widths[j] += step
+                    diff -= step
+                k += 1
+        elif not moved:
+            widths = list(prev_widths)
+
+    best = Grid2DResult(
+        best.col_widths, best.row_heights, max_outer, total_rounds,
+        bench_cost, best.converged, best.imbalance, best.times,
+    )
+    return best
+
+
+def cpm_partition_2d(
+    grid: Sequence[Sequence[SpeedFn2D]], M: int, N: int
+) -> Tuple[Grid2DResult, float]:
+    """The conventional baseline: ONE benchmark round at the even distribution
+    gives each processor a speed constant; rows/columns split proportionally.
+    Returns (result, bench_cost)."""
+    p, q = len(grid), len(grid[0])
+    w0, r0 = N // q, M // p
+    speeds = [[grid[i][j](float(r0), float(w0)) for j in range(q)] for i in range(p)]
+    bench_cost = max(
+        (r0 * w0) / speeds[i][j] for i in range(p) for j in range(q)
+    )
+    col_speed = [sum(speeds[i][j] for i in range(p)) for j in range(q)]
+    widths = cpm_partition(col_speed, N)
+    rows = [cpm_partition([speeds[i][j] for i in range(p)], M) for j in range(q)]
+    times = [
+        _col_times(grid, j, widths, rows[j]) for j in range(q)
+    ]
+    res = Grid2DResult(widths, rows, 1, 1, bench_cost, True, _flat_imbalance(times), times)
+    return res, bench_cost
+
+
+def _rebalance_widths(widths: List[int], times: List[List[float]], rows, N: int, *, damp: float = 0.5) -> List[int]:
+    """Outer step (ii): widths ∝ column speed sums, RELAXED by ``damp`` —
+    the undamped update oscillates when speeds bend with the allocation
+    (paging/nonlinear regions)."""
+    q = len(widths)
+    col_speed = []
+    for j in range(q):
+        s = sum(
+            (rows[j][i] * widths[j]) / times[j][i]
+            for i in range(len(rows[j]))
+            if times[j][i] > 0
+        )
+        col_speed.append(s)
+    tot = sum(col_speed)
+    target = [N * s / tot for s in col_speed]
+    blended = [
+        (1.0 - damp) * w + damp * t for w, t in zip(widths, target)
+    ]
+    new_widths = [max(int(round(b)), 1) for b in blended]
+    diff = N - sum(new_widths)
+    order = sorted(range(q), key=lambda j: blended[j] - new_widths[j], reverse=(diff > 0))
+    k = 0
+    while diff != 0:
+        j = order[k % q]
+        step = 1 if diff > 0 else -1
+        if new_widths[j] + step >= 1:
+            new_widths[j] += step
+            diff -= step
+        k += 1
+    return new_widths
+
+
+def ffmpa_partition_2d(
+    grid: Sequence[Sequence[SpeedFn2D]],
+    M: int,
+    N: int,
+    eps: float,
+    *,
+    max_outer: int = 50,
+) -> Grid2DResult:
+    """FFMPA baseline [18]: the FULL models are given (pre-built), so the
+    nested iteration runs entirely on the host with zero benchmark cost.
+    Rows are partitioned directly in ROW units (one row of width w = one
+    unit), avoiding unit->row rounding distortion."""
+    p, q = len(grid), len(grid[0])
+    widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
+    rows: List[List[int]] = [[M // p] * p for _ in range(q)]
+    times: List[List[float]] = [[0.0] * p for _ in range(q)]
+    best = None
+    for outer in range(1, max_outer + 1):
+        for j in range(q):
+            w = widths[j]
+            models = [
+                AnalyticModel(
+                    (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
+                )
+                for i in range(p)
+            ]
+            rows[j] = partition_units(models, M, min_units=1)
+            times[j] = _col_times(grid, j, widths, rows[j])
+        imb = _flat_imbalance(times)
+        if best is None or imb < best.imbalance:
+            best = Grid2DResult(list(widths), [list(r) for r in rows], outer, 0, 0.0, imb <= eps, imb, [list(t) for t in times])
+        if imb <= eps:
+            return best
+        new_widths = _rebalance_widths(widths, times, rows, N)
+        if new_widths == widths:
+            return best
+        widths = new_widths
+    return best
+
+
+def app_time_2d(
+    grid: Sequence[Sequence[SpeedFn2D]],
+    result: Grid2DResult,
+    K: int,
+    *,
+    bcast_overhead: float = 1.0e-3,
+) -> float:
+    """Full 2-D matmul app time: K pivot steps, each costing the slowest
+    processor's panel update + broadcast overhead (paper Fig. 7(a))."""
+    step = 0.0
+    for j, w in enumerate(result.col_widths):
+        for i, r in enumerate(result.row_heights[j]):
+            if r > 0:
+                step = max(step, (r * w) / grid[i][j](float(r), float(w)))
+    return K * (step + bcast_overhead)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, UnitBatcher
+
+__all__ = ["SyntheticLMData", "UnitBatcher"]

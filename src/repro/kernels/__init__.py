@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the compute hot-spots + jnp oracles.
+
+  * ``matmul_update``   — the paper's computational kernel (C += A.B panel
+    update), adapted from the 2011 CPU cache-blocking design to TPU:
+    MXU-aligned tiles, fp32 VMEM accumulator, K-innermost grid;
+  * ``flash_attention`` — online-softmax attention (causal / sliding-window /
+    logit-softcap / GQA) for the training & prefill paths;
+  * ``rglru``           — chunked linear recurrence for RG-LRU (recurrentgemma).
+
+Each kernel ships ``ref.py``-style oracles (pure jnp) and jit'd ``ops``
+wrappers that pick interpret mode automatically off-TPU.
+"""
+
+from .ops import flash_attention, matmul_update, rglru_scan
+
+__all__ = ["matmul_update", "flash_attention", "rglru_scan"]

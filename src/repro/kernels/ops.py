@@ -1,0 +1,41 @@
+"""Jit'd public wrappers: pick the Pallas kernel on TPU, interpret-mode
+Pallas for validation, or the jnp oracle — one switch for the whole stack."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .matmul_update import matmul_update_pallas
+from .rglru import rglru_scan_pallas
+
+__all__ = ["matmul_update", "flash_attention", "rglru_scan", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul_update(c, a, b, *, impl: str = "auto", **kw):
+    """impl: auto | pallas | interpret | ref"""
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        return ref.matmul_update_ref(c, a, b)
+    return matmul_update_pallas(c, a, b, interpret=(impl == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, *, impl: str = "auto", **kw):
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        kw.pop("bq", None)
+        kw.pop("bk", None)
+        return ref.flash_attention_ref(q, k, v, **kw)
+    return flash_attention_pallas(q, k, v, interpret=(impl == "interpret"), **kw)
+
+
+def rglru_scan(log_a, b, *, impl: str = "auto", **kw):
+    if impl == "ref" or (impl == "auto" and not on_tpu()):
+        return ref.rglru_scan_ref(log_a, b)
+    return rglru_scan_pallas(log_a, b, interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["matmul_update_ref", "flash_attention_ref", "rglru_scan_ref"]
+
+
+def matmul_update_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """C += A @ B with fp32 accumulation (the paper's panel-update kernel)."""
+    acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return (c.astype(jnp.float32) + acc).astype(c.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, Kv, Sk, D)
+    v: jax.Array,  # (B, Kv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    G = H // Kv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kr).astype(jnp.float32) * scale
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)  # right-aligned queries
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -2.0e38)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vr)
+
+
+def rglru_scan_ref(log_a: jax.Array, b: jax.Array, h0: jax.Array | None = None) -> jax.Array:
+    """h_t = exp(log_a_t) * h_{t-1} + b_t over axis 1.  (B, S, D) fp32."""
+
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la) * h + bb
+        return h, h
+
+    B, S, D = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (log_a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

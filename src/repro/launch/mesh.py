@@ -1,0 +1,37 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before the first jax init).
+
+Production target: TPU v5e, 256 chips per pod in a 16x16 ("data","model")
+mesh; multi-pod adds a leading "pod" axis over the DCN (2 pods = 512 chips
+in the dry-run; the axis scales to O(100) pods — per-pod mesh shape is
+unchanged, which is what the 1000+ node design relies on).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+
+    PEAK_FLOPS_BF16 = 197e12  # per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link
+    HBM_BYTES = 16 * 1024**3
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)

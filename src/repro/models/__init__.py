@@ -1,0 +1,10 @@
+from .config import ModelConfig
+from .transformer import (
+    decode_step,
+    init_cache,
+    lm_loss,
+    lm_spec,
+    prefill,
+)
+
+__all__ = ["ModelConfig", "lm_spec", "lm_loss", "init_cache", "prefill", "decode_step"]

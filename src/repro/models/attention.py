@@ -1,0 +1,424 @@
+"""Attention: GQA/MQA (global, sliding-window, cross) and MLA (deepseek-v2).
+
+Cache convention (per attention layer):
+  * GQA:  {"k": (B, S_buf, Kv, hd), "v": (B, S_buf, Kv, hd),
+           "pos": (S_buf,) int32 absolute positions, -1 = empty}
+  * MLA:  {"ckv": (B, S_buf, kv_lora), "kr": (B, S_buf, rope_hd),
+           "pos": (S_buf,)}
+
+``S_buf = min(seq_budget, window)`` for local layers (ring buffer), else the
+full sequence budget.  Decode writes at ``index % S_buf``; masks are derived
+from the stored absolute positions, so ring wraparound is handled uniformly.
+
+Flash-attention Pallas kernels (``repro.kernels.flash_attention``) are the
+TPU perf path for the training/prefill full-sequence case; the jnp path here
+is the oracle and the portable/dry-run path (toggled via ``use_kernel``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.params import ParamSpec
+from ..sharding.context import maybe_constrain
+from .config import ModelConfig
+from .layers import rope, softcap
+
+__all__ = [
+    "attn_spec",
+    "mla_spec",
+    "apply_attn",
+    "apply_mla",
+    "init_attn_cache",
+    "init_mla_cache",
+]
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def attn_spec(cfg: ModelConfig, *, cross: bool = False) -> Dict:
+    d, H, Kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, Kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, Kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_spec(cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rhd, vhd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "wdq": ParamSpec((d, qr), ("embed", "lora")),
+        "q_norm": {"scale": ParamSpec((qr,), ("lora",), init="ones")},
+        "wuq": ParamSpec((qr, H, nope + rhd), ("lora", "heads", "head_dim")),
+        "wdkv": ParamSpec((d, kvr), ("embed", "lora")),
+        "kv_norm": {"scale": ParamSpec((kvr,), ("lora",), init="ones")},
+        "wuk": ParamSpec((kvr, H, nope), ("lora", "heads", "head_dim")),
+        "wuv": ParamSpec((kvr, H, vhd), ("lora", "heads", "head_dim")),
+        "wkr": ParamSpec((d, rhd), ("embed", "head_dim")),
+        "wo": ParamSpec((H, vhd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _buf_len(cfg: ModelConfig, kind: str, seq_budget: int) -> int:
+    if kind == "local" and cfg.window > 0:
+        return min(seq_budget, cfg.window)
+    return seq_budget
+
+
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, seq_budget: int, dtype) -> Dict:
+    S = _buf_len(cfg, kind, seq_budget)
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, S, Kv, hd), dtype),
+        "v": jnp.zeros((batch, S, Kv, hd), dtype),
+        "pos": jnp.full((S,), -1, jnp.int32),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq_budget: int, dtype) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, seq_budget, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, seq_budget, cfg.rope_head_dim), dtype),
+        "pos": jnp.full((seq_budget,), -1, jnp.int32),
+    }
+
+
+def attn_cache_axes(cfg: ModelConfig, kind: str) -> Dict:
+    """Logical sharding axes for the GQA cache.
+
+    Global-attention caches shard the SEQUENCE over the model axis
+    ('seq_kv'): batch-only sharding leaves a 32k-context cache replicated
+    across tensor ranks whenever kv_heads < |model| (kv=8 archs measured
+    50+ GiB/device at decode_32k).  The kv_heads dim then falls back to
+    replicated via the conflict rule; decode attention pays one small psum
+    of (B, H, 1) partial scores instead.  Sliding-window caches are small
+    — keep them batch-sharded only."""
+    seq_ax = "seq_kv" if kind != "local" else "seq"
+    return {
+        "k": ("batch", seq_ax, "kv_heads", "head_dim"),
+        "v": ("batch", seq_ax, "kv_heads", "head_dim"),
+        "pos": ("seq",),
+    }
+
+
+def mla_cache_axes(cfg: ModelConfig) -> Dict:
+    """MLA caches are shared across heads (no head dim to shard) -> shard
+    the sequence over the model axis."""
+    return {
+        "ckv": ("batch", "seq_kv", "lora"),
+        "kr": ("batch", "seq_kv", "head_dim"),
+        "pos": ("seq",),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (jnp oracle path)
+# ---------------------------------------------------------------------------
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Kv, hd)
+    v: jax.Array,  # (B, Sk, Kv, hd)
+    mask: Optional[jax.Array],  # (Sq, Sk) or (B, Sq, Sk) additive-bool
+    *,
+    scale: float,
+    cap: float,
+) -> jax.Array:
+    """GQA handled by broadcasting KV to H heads (XLA fuses the repeat into
+    the matmuls).  A (Kv, G) reshape-grouping instead FRAGMENTS the head
+    sharding whenever Kv doesn't divide the model axis — the partitioner
+    then thrashes involuntary reshards of the fp32 logits (measured 32 GiB
+    of all-gathers per layer on kv=8 x mesh 16)."""
+    B, Sq, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cap)
+    if mask is not None:
+        m = mask if mask.ndim == 2 else mask[:, None]
+        logits = jnp.where(m, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", w, v)
+
+
+def _causal_mask(Sq: int, Sk: int, window: int, q_offset: int = 0) -> jax.Array:
+    """(Sq, Sk) mask: key j visible to query i iff j <= i (+offset) and within
+    the sliding window when ``window > 0``."""
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m
+
+
+def _sdpa_chunked(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, Kv, hd)
+    v: jax.Array,
+    *,
+    scale: float,
+    cap: float,
+    causal: bool,
+    window: int,
+    q_chunk: int,
+    unroll: bool = False,
+) -> jax.Array:
+    """Flash-attention schedule in pure jnp: scan over query chunks so the
+    live logits buffer is (B, q_chunk, Sk) — the long-prefill memory path
+    (the Pallas kernel is the on-TPU twin of this loop)."""
+    B, Sq, H, hd = q.shape
+    L = q_chunk
+    if Sq % L != 0:
+        return _sdpa(
+            q, k, v,
+            _causal_mask(Sq, k.shape[1], window) if causal else None,
+            scale=scale, cap=cap,
+        )
+    nc = Sq // L
+    qc = q.reshape(B, nc, L, H, hd).transpose(1, 0, 2, 3, 4)
+    offsets = jnp.arange(nc) * L
+
+    # checkpoint the chunk body: without it the backward stores every
+    # chunk's fp32 softmax residuals simultaneously — i.e. the full
+    # (B, H, Sq, Sk) logits the chunking was supposed to avoid.
+    @jax.checkpoint
+    def body(_, inp):
+        qi, off = inp
+        if causal:
+            mask = _causal_mask(L, k.shape[1], window, q_offset=off)
+        else:
+            mask = None
+        return None, _sdpa(qi, k, v, mask, scale=scale, cap=cap)
+
+    _, out = jax.lax.scan(body, None, (qc, offsets), unroll=unroll)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA apply
+# ---------------------------------------------------------------------------
+
+
+def apply_attn(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (S,) absolute positions of x
+    *,
+    kind: str,  # attn | local
+    causal: bool = True,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (output, updated_cache).
+
+    Modes:
+      * train:            cache=None, decode=False — full-sequence causal.
+      * prefill:          cache given (zeroed), decode=False — fills the cache.
+      * decode:           cache given, decode=True, S == 1.
+      * cross-attention:  cross_kv=(k, v) precomputed from encoder output.
+    """
+    dtype = x.dtype
+    B, S, _ = x.shape
+    window = cfg.window if kind == "local" else 0
+    scale = cfg.query_scale if cfg.query_scale > 0 else 1.0 / math.sqrt(cfg.head_dim)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = maybe_constrain(q, ("batch", "seq", "heads", "head_dim"))
+        if S >= cfg.attn_chunk_threshold:
+            out = _sdpa_chunked(
+                q, k, v, scale=scale, cap=cfg.attn_softcap, causal=False,
+                window=0, q_chunk=cfg.attn_q_chunk, unroll=cfg.unroll_scans,
+            )
+        else:
+            out = _sdpa(q, k, v, None, scale=scale, cap=cfg.attn_softcap)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype)), cache
+
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    # Ulysses-style transition: the residual stream is sequence-sharded over
+    # the model axis; attention wants HEADS sharded and the sequence whole —
+    # without this the (B, H, Sq, Sk) fp32 logits materialize with ALL heads
+    # per device (measured 8 GiB per buffer on deepseek's 128 heads).
+    q = maybe_constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = maybe_constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = maybe_constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    q = rope(q, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+    k = rope(k, positions, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    def full_attn(q, k, v):
+        if S >= cfg.attn_chunk_threshold:
+            return _sdpa_chunked(
+                q, k, v, scale=scale, cap=cfg.attn_softcap,
+                causal=causal, window=window, q_chunk=cfg.attn_q_chunk,
+                unroll=cfg.unroll_scans,
+            )
+        mask = _causal_mask(S, S, window) if causal else None
+        return _sdpa(q, k, v, mask, scale=scale, cap=cfg.attn_softcap)
+
+    if cache is None:
+        out = full_attn(q, k, v)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype)), None
+
+    S_buf = cache["k"].shape[1]
+    if not decode:
+        # Prefill: attend over the in-flight sequence, then store the last
+        # S_buf positions into the (ring) buffer.  When the prompt exactly
+        # fills the buffer (the standard prefill) the ring layout is the
+        # identity — write directly, no scatter (keeps the seq-sharded cache
+        # path collective-free).
+        out = full_attn(q, k, v)
+        keep = min(S, S_buf)
+        if S == S_buf:
+            new_cache = {"k": k, "v": v, "pos": positions}
+        else:
+            slot = positions[-keep:] % S_buf
+            new_cache = {
+                "k": cache["k"].at[:, slot].set(k[:, -keep:]),
+                "v": cache["v"].at[:, slot].set(v[:, -keep:]),
+                "pos": cache["pos"].at[slot].set(positions[-keep:]),
+            }
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype)), new_cache
+
+    # Decode: S == 1, write at position % S_buf, attend over the buffer.
+    pos = positions[0]
+    slot = pos % S_buf
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, slot, axis=0)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        valid &= cpos > pos - window
+    out = _sdpa(q, ck, cv, valid[None, :], scale=scale, cap=cfg.attn_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, {"k": ck, "v": cv, "pos": cpos}
+
+
+# ---------------------------------------------------------------------------
+# MLA apply (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+
+def _mla_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mla(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Multi-head Latent Attention.
+
+    Train/prefill: decompress the latent KV (oracle-simple, matmul-heavy —
+    this is what the FPM sees as its computational kernel).  Decode: the
+    *absorbed* form — attention runs entirely in the compressed space
+    (scores ~ MQA with head_dim kv_lora+rope), never materializing per-head
+    K/V for the 32k cache.
+    """
+    dtype = x.dtype
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rhd, vhd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nope + rhd)
+
+    cq = _mla_norm(params["q_norm"]["scale"], x @ params["wdq"].astype(dtype))
+    q = jnp.einsum("bsq,qhk->bshk", cq, params["wuq"].astype(dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckv = _mla_norm(params["kv_norm"]["scale"], x @ params["wdkv"].astype(dtype))
+    kr = rope((x @ params["wkr"].astype(dtype))[:, :, None, :], positions, theta=cfg.rope_theta)[:, :, 0]
+
+    if not decode:
+        k_nope = jnp.einsum("bsc,chk->bshk", ckv, params["wuk"].astype(dtype))
+        v = jnp.einsum("bsc,chk->bshk", ckv, params["wuv"].astype(dtype))
+        # Fold the decoupled-RoPE scores into a standard attention by
+        # concatenating features: q_eff/k_eff have head_dim nope+rhd.
+        q_eff = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_eff = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr[:, :, None, :], k_nope.shape[:3] + (rhd,))],
+            axis=-1,
+        )
+        # Head-sharded attention (see apply_attn): 128 MLA heads must not
+        # ride the sequence-sharded layout into the fp32 logits.
+        q_eff = maybe_constrain(q_eff, ("batch", "seq", "heads", "head_dim"))
+        k_eff = maybe_constrain(k_eff, ("batch", "seq", "heads", "head_dim"))
+        v = maybe_constrain(v, ("batch", "seq", "heads", "head_dim"))
+        if S >= cfg.attn_chunk_threshold:
+            out = _sdpa_chunked(
+                q_eff, k_eff, v, scale=scale, cap=0.0, causal=True, window=0,
+                q_chunk=cfg.attn_q_chunk, unroll=cfg.unroll_scans,
+            )
+        else:
+            out = _sdpa(q_eff, k_eff, v, _causal_mask(S, S, 0), scale=scale, cap=0.0)
+        y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+        new_cache = None
+        if cache is not None:
+            S_buf = cache["ckv"].shape[1]
+            if S == S_buf:  # standard prefill: direct write, no scatter
+                new_cache = {"ckv": ckv, "kr": kr, "pos": positions}
+            else:
+                keep = min(S, S_buf)
+                slot = positions[-keep:] % S_buf
+                new_cache = {
+                    "ckv": cache["ckv"].at[:, slot].set(ckv[:, -keep:]),
+                    "kr": cache["kr"].at[:, slot].set(kr[:, -keep:]),
+                    "pos": cache["pos"].at[slot].set(positions[-keep:]),
+                }
+        return y, new_cache
+
+    # Absorbed decode (S == 1).
+    assert cache is not None
+    pos = positions[0]
+    S_buf = cache["ckv"].shape[1]
+    slot = pos % S_buf
+    cckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv, slot, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions, slot, axis=0)
+    valid = (cpos >= 0) & (cpos <= pos)
+
+    # q_nope absorbed through W_uk:  (B,1,H,nope) x (kv_lora,H,nope) -> (B,1,H,kv_lora)
+    q_abs = jnp.einsum("bqhk,chk->bqhc", q_nope, params["wuk"].astype(dtype))
+    logits = (
+        jnp.einsum("bqhc,bsc->bhqs", q_abs, cckv)
+        + jnp.einsum("bqhk,bsk->bhqs", q_rope, ckr)
+    ).astype(jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, -1).astype(dtype)
+    ctx = jnp.einsum("bhqs,bsc->bqhc", w, cckv)  # compressed context
+    out = jnp.einsum("bqhc,chk->bqhk", ctx, params["wuv"].astype(dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return y, {"ckv": cckv, "kr": ckr, "pos": cpos}

@@ -1,0 +1,142 @@
+"""One config dataclass covering all assigned architecture families."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | hybrid | audio | ssm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # Block pattern: layer kinds cycled over the depth.  Kinds:
+    #   attn   — global attention block
+    #   local  — sliding-window attention block
+    #   rec    — RG-LRU recurrent block (recurrentgemma)
+    #   mlstm / slstm — xLSTM blocks
+    pattern: Tuple[str, ...] = ("attn",)
+    # Unscanned leading layers (deepseek-v2's dense first layer).
+    prefix: Tuple[str, ...] = ()
+    prefix_dense_ff: int = 0  # d_ff of the dense prefix layer(s)
+
+    mlp_kind: str = "swiglu"  # swiglu | geglu | gelu (non-gated)
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm
+
+    # Attention options
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    window: int = 0  # sliding-window size for 'local' layers
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    query_scale: float = 0.0  # 0 -> 1/sqrt(head_dim)
+    post_norms: bool = False  # gemma2 sandwich (post-attn/post-mlp norms)
+    tie_embeddings: bool = True
+    embed_scale: float = 1.0  # gemma multiplies embeddings by sqrt(d_model)
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+    # MLA (deepseek-v2)
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # Recurrent blocks
+    d_rnn: int = 0
+    conv_width: int = 4
+
+    # Encoder-decoder (seamless)
+    encoder_layers: int = 0
+    encoder_pattern: Tuple[str, ...] = ("attn",)
+
+    # Modality frontend STUBS: input_specs() supplies precomputed embeddings.
+    frontend: str = "none"  # none | vision_stub | audio_stub
+    num_prefix_embeddings: int = 0  # patches prepended to the text sequence
+
+    # Attention memory policy: full-sequence (no-cache/prefill) attention
+    # switches to a scan-over-query-chunks path (flash-attention schedule in
+    # pure jnp) once Sq exceeds the threshold — bounds live logits to
+    # (B, q_chunk, S) instead of (B, S, S).
+    attn_chunk_threshold: int = 8192
+    attn_q_chunk: int = 1024
+
+    # Loss / numerics
+    zloss: float = 0.0
+    logit_dtype: Any = jnp.float32
+    dtype: Any = jnp.bfloat16
+    # Cross-entropy computed in sequence chunks of this size (0 = unchunked);
+    # bounds the live [B, chunk, V] logits buffer for 256k vocabularies.
+    xent_chunk: int = 512
+
+    # Distribution knobs (overridable per run)
+    remat: str = "full"  # none | full — remat policy for scanned blocks
+    scan_layers: bool = True
+    # Gradient-accumulation microbatches per train step (the DFPA unit
+    # count of one step).  Big configs need A > 1 to bound activation
+    # transients; global batch semantics are unchanged.
+    train_accum: int = 1
+    # Dry-run analysis mode: unroll inner lax.scans (xent chunks, chunked
+    # attention, mlstm chunks) so XLA's cost analysis counts every trip —
+    # scan bodies are otherwise counted ONCE, silently under-reporting
+    # flops/collectives.  Semantics identical; compile time higher.
+    unroll_scans: bool = False
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1) != 0:
+            raise ValueError("num_heads must be divisible by num_kv_heads")
+        scanned = self.num_layers - len(self.prefix)
+        if self.scan_layers and scanned % len(self.pattern) != 0:
+            raise ValueError(
+                f"{self.name}: {scanned} scanned layers not divisible by pattern {self.pattern}"
+            )
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def num_units(self) -> int:
+        return (self.num_layers - len(self.prefix)) // len(self.pattern)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode-state size is O(1) in context length — the archs
+        that run the long_500k shape."""
+        quad = any(k in ("attn",) for k in self.pattern + self.prefix + (self.encoder_pattern if self.is_encdec else ()))
+        return not quad
+
+    def replace(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)

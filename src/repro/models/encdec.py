@@ -1,0 +1,268 @@
+"""Encoder-decoder assembly (seamless-m4t): audio-stub encoder + text decoder.
+
+The modality frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d) directly.  Decoder blocks carry
+self-attention (causal, cached) + cross-attention over the encoder output.
+Cross K/V are computed once per layer at encode time and cached for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.context import maybe_constrain
+from .attention import apply_attn, attn_spec, init_attn_cache
+from .config import ModelConfig
+from .layers import apply_norm, norm_spec, stacked
+from .transformer import (
+    _embed_tokens,
+    apply_block,
+    block_spec,
+    lm_logits,
+    softcap,
+)
+
+__all__ = [
+    "encdec_spec",
+    "encode",
+    "apply_decoder",
+    "encdec_loss",
+    "init_encdec_cache",
+    "encdec_prefill",
+    "encdec_decode_step",
+]
+
+
+def _enc_units(cfg: ModelConfig) -> int:
+    return cfg.encoder_layers // len(cfg.encoder_pattern)
+
+
+def encdec_spec(cfg: ModelConfig) -> Dict:
+    from .layers import embedding_spec
+
+    spec: Dict[str, Any] = {
+        "encoder": {
+            "units": tuple(
+                stacked(block_spec(cfg, k, moe=False, d_ff=cfg.d_ff), _enc_units(cfg))
+                for k in cfg.encoder_pattern
+            ),
+            "final_norm": norm_spec(cfg.d_model, cfg.norm_kind),
+        },
+        "decoder": {
+            "embed": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "units": tuple(
+                stacked(
+                    block_spec(cfg, k, moe=False, d_ff=cfg.d_ff, cross=True),
+                    cfg.num_units,
+                )
+                for k in cfg.pattern
+            ),
+            "final_norm": norm_spec(cfg.d_model, cfg.norm_kind),
+        },
+    }
+    return spec
+
+
+def encode(params: Dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub embeddings -> encoder hidden (B, S_enc, d)."""
+    x = frames.astype(cfg.dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def unit_body(x, slot_params):
+        x = maybe_constrain(x, ("batch", "seq_act", "embed_act"))
+        for s, kind in enumerate(cfg.encoder_pattern):
+            x, _, _ = apply_block(
+                slot_params[s], cfg, kind, x, positions, moe=False, causal=False
+            )
+        return x
+
+    if cfg.remat == "full":
+        unit_body = jax.checkpoint(unit_body)
+
+    if cfg.scan_layers:
+        def scan_fn(x, xs):
+            return unit_body(x, xs), None
+
+        x, _ = jax.lax.scan(scan_fn, x, params["encoder"]["units"])
+    else:
+        n_units = _enc_units(cfg)
+        for u in range(n_units):
+            sp = jax.tree_util.tree_map(lambda a: a[u], params["encoder"]["units"])
+            x = unit_body(x, sp)
+    return apply_norm(params["encoder"]["final_norm"], x)
+
+
+def _cross_kv_all(params: Dict, cfg: ModelConfig, enc_out: jax.Array):
+    """Precompute per-unit, per-slot cross K/V: stacked (U, B, S_enc, Kv, hd)."""
+    dtype = enc_out.dtype
+
+    def per_slot(slot_params):
+        xk = jnp.einsum("bsd,udhk->ubshk", enc_out, slot_params["xattn"]["wk"].astype(dtype))
+        xv = jnp.einsum("bsd,udhk->ubshk", enc_out, slot_params["xattn"]["wv"].astype(dtype))
+        return xk, xv
+
+    return tuple(per_slot(sp) for sp in params["decoder"]["units"])
+
+
+def apply_decoder(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    positions: jax.Array,
+    cross_kv: Tuple,  # per-slot (xk, xv), stacked (U, B, S_enc, Kv, hd)
+    *,
+    caches: Optional[Dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    dp = params["decoder"]
+    x = _embed_tokens(dp, cfg, tokens)
+    unit_caches = caches["units"] if caches is not None else None
+
+    def unit_body(x, slot_params, slot_caches, slot_xkv):
+        x = maybe_constrain(x, ("batch", "seq_act", "embed_act"))
+        ncs = []
+        for s, kind in enumerate(cfg.pattern):
+            c = slot_caches[s] if slot_caches is not None else None
+            x, nc, _ = apply_block(
+                slot_params[s], cfg, kind, x, positions, moe=False,
+                cache=c, decode=decode, causal=True, cross_kv=slot_xkv[s],
+            )
+            ncs.append(nc)
+        return x, tuple(ncs)
+
+    if cfg.remat == "full":
+        unit_body = jax.checkpoint(unit_body)
+
+    xkv_stacked = tuple((xk, xv) for xk, xv in cross_kv)
+    if cfg.scan_layers:
+        if unit_caches is None:
+            def scan_fn(x, xs):
+                sp, sxkv = xs
+                x, _ = unit_body(x, sp, None, sxkv)
+                return x, None
+
+            x, _ = jax.lax.scan(scan_fn, x, (dp["units"], xkv_stacked))
+            new_units = None
+        else:
+            def scan_fn(x, xs):
+                sp, sc, sxkv = xs
+                x, ncs = unit_body(x, sp, sc, sxkv)
+                return x, ncs
+
+            x, new_units = jax.lax.scan(
+                scan_fn, x, (dp["units"], unit_caches, xkv_stacked)
+            )
+    else:
+        new_units_list = []
+        for u in range(cfg.num_units):
+            at_u = lambda a: a[u]
+            sp = jax.tree_util.tree_map(at_u, dp["units"])
+            sxkv = jax.tree_util.tree_map(at_u, xkv_stacked)
+            sc = (
+                jax.tree_util.tree_map(at_u, unit_caches)
+                if unit_caches is not None
+                else None
+            )
+            x, ncs = unit_body(x, sp, sc, sxkv)
+            new_units_list.append(ncs)
+        new_units = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_units_list)
+            if unit_caches is not None
+            else None
+        )
+
+    x = apply_norm(dp["final_norm"], x)
+    new_caches = {"units": new_units} if caches is not None else None
+    return x, new_caches
+
+
+def _dec_logits(params: Dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    w = params["decoder"]["embed"]["embedding"].T
+    logits = (hidden @ w.astype(hidden.dtype)).astype(cfg.logit_dtype)
+    return softcap(logits, cfg.final_softcap)
+
+
+def encdec_loss(params: Dict, cfg: ModelConfig, batch: Dict) -> Tuple[jax.Array, Dict]:
+    """batch: frames (B, S_enc, d), tokens (B, S_dec), labels (B, S_dec)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    cross_kv = _cross_kv_all(params, cfg, enc_out)
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, _ = apply_decoder(params, cfg, tokens, positions, cross_kv)
+
+    w = params["decoder"]["embed"]["embedding"].T.astype(hidden.dtype)
+    L = cfg.xent_chunk if 0 < cfg.xent_chunk <= S and S % cfg.xent_chunk == 0 else S
+    nc = S // L
+    h_ch = hidden.reshape(B, nc, L, -1).transpose(1, 0, 2, 3)
+    y_ch = labels.reshape(B, nc, L).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_fn(acc, inp):
+        h, y = inp
+        logits = (h @ w).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.clip(y, 0)[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        return (acc[0] + ((lse - gold) * mask).sum(), acc[1] + mask.sum()), None
+
+    (nll, cnt), _ = jax.lax.scan(
+        chunk_fn, (jnp.zeros(()), jnp.zeros(())), (h_ch, y_ch), unroll=cfg.unroll_scans
+    )
+    loss = nll / jnp.maximum(cnt, 1.0)
+    return loss, {"nll": loss, "tokens": cnt, "aux": jnp.zeros(())}
+
+
+# -- serving -----------------------------------------------------------------
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, seq_budget: int, enc_len: int, dtype=jnp.bfloat16) -> Dict:
+    """Decoder self-attn caches + slots for cached cross K/V."""
+    U = cfg.num_units
+    Kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def slot_cache(kind):
+        base = init_attn_cache(cfg, kind, batch, seq_budget, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (U,) + a.shape).copy(), base
+        )
+
+    units = tuple(slot_cache(k) for k in cfg.pattern)
+    xkv = tuple(
+        (
+            jnp.zeros((U, batch, enc_len, Kv, hd), dtype),
+            jnp.zeros((U, batch, enc_len, Kv, hd), dtype),
+        )
+        for _ in cfg.pattern
+    )
+    return {"units": units, "cross_kv": xkv}
+
+
+def encdec_prefill(
+    params: Dict, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array, caches: Dict
+) -> Tuple[jax.Array, Dict]:
+    enc_out = encode(params, cfg, frames)
+    cross_kv = _cross_kv_all(params, cfg, enc_out)
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    hidden, new_caches = apply_decoder(
+        params, cfg, tokens, positions, cross_kv, caches={"units": caches["units"]}
+    )
+    out = {"units": new_caches["units"], "cross_kv": cross_kv}
+    return _dec_logits(params, cfg, hidden[:, -1:])[:, 0], out
+
+
+def encdec_decode_step(
+    params: Dict, cfg: ModelConfig, token: jax.Array, pos: jax.Array, caches: Dict
+) -> Tuple[jax.Array, Dict]:
+    positions = pos[None].astype(jnp.int32)
+    hidden, new_caches = apply_decoder(
+        params, cfg, token, positions, caches["cross_kv"],
+        caches={"units": caches["units"]}, decode=True,
+    )
+    out = {"units": new_caches["units"], "cross_kv": caches["cross_kv"]}
+    return _dec_logits(params, cfg, hidden[:, 0]), out

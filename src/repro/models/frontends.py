@@ -1,0 +1,32 @@
+"""Modality frontend STUBS (per the assignment, `[vlm]`/`[audio]` entries
+specify the transformer BACKBONE only).
+
+``input_specs()`` in the launcher supplies ShapeDtypeStructs for precomputed
+patch/frame embeddings; these helpers generate deterministic concrete values
+for smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["stub_patch_embeddings", "stub_frame_embeddings"]
+
+
+def stub_patch_embeddings(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    """Vision stub: (B, num_prefix_embeddings, d_model) 'patch embeddings'."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(
+        key, (batch, cfg.num_prefix_embeddings, cfg.d_model), jnp.float32
+    ).astype(cfg.dtype)
+
+
+def stub_frame_embeddings(cfg: ModelConfig, batch: int, seq: int, seed: int = 0) -> jax.Array:
+    """Audio stub: (B, seq, d_model) 'speech frame embeddings'."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32).astype(
+        cfg.dtype
+    )

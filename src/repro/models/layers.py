@@ -1,0 +1,137 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings, softcaps.
+
+All apply-functions are pure: ``apply(params, x, ...) -> y``; spec builders
+return ``ParamSpec`` trees (see ``repro.nn.params``).  A leading ``stack``
+axis on every spec supports scan-over-layers stacking (added by the caller
+via ``stacked()``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.params import ParamSpec
+
+__all__ = [
+    "stacked",
+    "norm_spec",
+    "apply_norm",
+    "mlp_spec",
+    "apply_mlp",
+    "embedding_spec",
+    "softcap",
+    "rope",
+]
+
+
+def stacked(spec, n: int):
+    """Prepend a ``layers`` stacking dim of size ``n`` to every leaf spec."""
+
+    def f(l: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + l.shape, ("layers",) + l.axes, l.dtype, l.init, l.scale)
+
+    return jax.tree_util.tree_map(f, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# -- normalization -----------------------------------------------------------
+
+
+def norm_spec(d: int, kind: str = "rmsnorm") -> Dict:
+    spec = {"scale": ParamSpec((d,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        spec["bias"] = ParamSpec((d,), ("embed",), init="zeros")
+    return spec
+
+
+def apply_norm(params: Dict, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm (gemma-style: scale applied as (1 + scale) when init zeros;
+        # we init scale to ones and multiply directly)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# -- MLPs ---------------------------------------------------------------------
+
+
+def mlp_spec(d: int, d_ff: int, kind: str) -> Dict:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d, d_ff), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, d_ff), ("embed", "mlp")),
+            "wo": ParamSpec((d_ff, d), ("mlp", "embed")),
+        }
+    if kind == "gelu":
+        return {
+            "wi": ParamSpec((d, d_ff), ("embed", "mlp")),
+            "wo": ParamSpec((d_ff, d), ("mlp", "embed")),
+        }
+    raise ValueError(f"unknown mlp kind {kind}")
+
+
+def apply_mlp(params: Dict, x: jax.Array, kind: str) -> jax.Array:
+    dtype = x.dtype
+    if kind in ("swiglu", "geglu"):
+        g = x @ params["wi_gate"].astype(dtype)
+        u = x @ params["wi_up"].astype(dtype)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g, approximate=True)
+        return (act * u) @ params["wo"].astype(dtype)
+    h = jax.nn.gelu(x @ params["wi"].astype(dtype), approximate=True)
+    return h @ params["wo"].astype(dtype)
+
+
+# -- embeddings ---------------------------------------------------------------
+
+
+def embedding_spec(vocab: int, d: int) -> Dict:
+    return {"embedding": ParamSpec((vocab, d), ("vocab", "embed"), init="normal", scale=1.0)}
+
+
+# -- misc ---------------------------------------------------------------------
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10000.0,
+    fraction: float = 1.0,
+) -> jax.Array:
+    """Rotary embedding on the last dim of ``x``: (..., seq, heads, head_dim).
+
+    ``positions``: (..., seq) int32.  ``fraction`` < 1 rotates only the first
+    ``fraction * head_dim`` features (stablelm partial rotary).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    angles = angles[..., None, :]  # broadcast over heads: (..., seq, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    out = out.astype(x.dtype)
+    if x_pass.shape[-1]:
+        return jnp.concatenate([out, x_pass], axis=-1)
+    return out

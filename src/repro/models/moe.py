@@ -1,0 +1,231 @@
+"""Mixture-of-Experts: top-k router + per-sequence sort-based dispatch.
+
+TPU-native design (hardware-adaptation note, DESIGN.md §2):
+
+  * routing / top-k / per-sequence sort run in auto-SPMD land (row-local
+    ops on batch-sharded arrays — no communication);
+  * the dispatch scatter and combine gather run inside ``jax.shard_map``
+    MANUAL over the batch mesh axes: data-dependent scatters/gathers are
+    provably local per shard, which the auto partitioner cannot infer — it
+    otherwise replicates the (B, S*k, d) update arrays and all-reduces
+    them (measured 117 s of collectives per step on granite-moe before
+    this restructure; see EXPERIMENTS.md §Perf);
+  * the expert FFN einsum runs in auto land between two sharding
+    constraints (batch->data ... experts->model): the SPMD partitioner
+    emits exactly the canonical expert-parallel all-to-all pair at those
+    boundaries, and handles the FSDP gathers of expert weights.
+
+Capacity: per-sequence C = ceil(S*k/E * factor) (Switch-style group
+capacity, group = sequence); overflow drops to the residual path.  Shared
+experts (deepseek-v2) are dense matmuls in auto land.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..nn.params import ParamSpec
+from ..sharding.context import current_activation_mesh, maybe_constrain
+from .config import ModelConfig
+
+__all__ = ["moe_spec", "apply_moe"]
+
+
+def moe_spec(cfg: ModelConfig) -> Dict:
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.d_ff_expert
+    spec = {
+        "router": ParamSpec((d, E), ("embed", "experts"), init="normal", scale=0.02),
+        "wi_gate": ParamSpec((E, d, ff), ("experts", "embed", "mlp")),
+        "wi_up": ParamSpec((E, d, ff), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((E, ff, d), ("experts", "mlp", "embed")),
+    }
+    if cfg.num_shared_experts > 0:
+        sff = ff * cfg.num_shared_experts
+        spec["shared"] = {
+            "wi_gate": ParamSpec((d, sff), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, sff), ("embed", "mlp")),
+            "wo": ParamSpec((sff, d), ("mlp", "embed")),
+        }
+    return spec
+
+
+def _batch_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _dispatch_local(x, slot_pair, EC, slot_lo=0, slot_hi=None):
+    """Scatter tokens into the (B, EC+1, d) buffer — local math.
+
+    ``slot_pair`` is (B, S, k) in TOKEN order; the k choices are scattered
+    one at a time so every live operand is (B, S, d) — a single fused
+    (B, S*k, d) gather/scatter costs k x the hidden size in live buffers
+    (measured 7.5 GiB fp32 instances on deepseek's k=6).
+
+    With ``slot_lo/hi`` the body keeps only its model rank's expert slots
+    (slot - slot_lo), everything else going to the drop row: expert
+    parallelism with ZERO dispatch communication (x is replicated over the
+    model axis anyway)."""
+    Bl, S, d = x.shape
+    k = slot_pair.shape[-1]
+    brow = jnp.arange(Bl)[:, None]
+    if slot_hi is not None:
+        mine = (slot_pair >= slot_lo) & (slot_pair < slot_hi)
+        slot_pair = jnp.where(mine, slot_pair - slot_lo, EC)
+    buf = jnp.zeros((Bl, EC + 1, d), x.dtype)
+    for i in range(k):
+        buf = buf.at[brow, slot_pair[:, :, i]].add(x)
+    return buf
+
+
+def _combine_local(out_flat, slot_pair, gk_pair, slot_lo=0, slot_hi=None):
+    """Gather expert outputs back to token positions — local math, one
+    choice at a time (see _dispatch_local).  With slot windowing each model
+    rank combines only its experts' outputs (caller psums over model)."""
+    Bl, EC, d = out_flat.shape
+    brow = jnp.arange(Bl)[:, None]
+    k = slot_pair.shape[-1]
+    if slot_hi is not None:
+        mine = (slot_pair >= slot_lo) & (slot_pair < slot_hi)
+        gk_pair = gk_pair * mine
+        slot_pair = jnp.where(mine, slot_pair - slot_lo, 0)
+    S = slot_pair.shape[1]
+    y = jnp.zeros((Bl, S, d), out_flat.dtype)
+    for i in range(k):
+        sl = jnp.minimum(slot_pair[:, :, i], EC - 1)
+        y = y + out_flat[brow, sl] * gk_pair[:, :, i, None].astype(out_flat.dtype)
+    return y
+
+
+def apply_moe(params: Dict, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).  See module docstring."""
+    dtype = x.dtype
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    Sk = S * k
+
+    # ---- routing (auto land: row-local on batch-sharded arrays) ----------
+    logits = (x @ params["router"].astype(dtype)).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    C = min(max(int(math.ceil(S * k / E * cfg.capacity_factor)), 1), Sk)
+
+    e_flat = eidx.reshape(B, Sk)
+    g_flat = gate.reshape(B, Sk)
+    brow = jnp.arange(B)[:, None]
+    order = jnp.argsort(e_flat, axis=1, stable=True)
+    e_sort = jnp.take_along_axis(e_flat, order, axis=1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E), side="left"))(
+        e_sort
+    )  # (B,E)
+    pos_in_e = jnp.arange(Sk)[None, :] - jnp.take_along_axis(starts, e_sort, axis=1)
+    keep_sorted = pos_in_e < C
+    slot_sorted = jnp.where(keep_sorted, e_sort * C + pos_in_e, E * C)
+    # Back to TOKEN order: (B, S, k) per-choice slots and kept gates — the
+    # dispatch/combine then work on (B, S, d)-sized operands per choice.
+    slot_pair = (
+        jnp.zeros((B, Sk), jnp.int32).at[brow, order].set(slot_sorted).reshape(B, S, k)
+    )
+    gk_pair = (
+        jnp.zeros((B, Sk), jnp.float32)
+        .at[brow, order]
+        .set(g_flat[brow, order] * keep_sorted)
+        .reshape(B, S, k)
+    )
+
+    # ---- dispatch / FFN / combine -----------------------------------------
+    # Expert parallelism with ZERO dispatch communication: the residual is
+    # replicated over the model axis, so each model rank scatters only ITS
+    # experts' slots into a local (B_loc, E_loc*C, d) buffer; the expert FFN
+    # runs in auto land (FSDP weight gathers handled by the partitioner);
+    # each rank combines its experts' outputs and one psum over the model
+    # axis finishes the job — O(B*S*d) comm per layer, vs the all-gathers
+    # of the token array an auto-land scatter costs (EXPERIMENTS.md §Perf).
+    mesh = current_activation_mesh()
+    manual = None
+    if mesh is not None:
+        baxes = _batch_axes(mesh)
+        nshard = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+        msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+        if baxes and B % nshard == 0 and E % msize == 0:
+            manual = baxes + ("model",)
+
+    if manual is not None:
+        E_loc = E // msize
+        bspec = P(_batch_axes(mesh))
+        x_in = maybe_constrain(x, ("batch", None, None))
+        slot_pair = maybe_constrain(slot_pair, ("batch", None, None))
+        gk_pair = maybe_constrain(gk_pair, ("batch", None, None))
+
+        def disp(xx, ss):
+            lo = jax.lax.axis_index("model") * E_loc * C
+            return _dispatch_local(xx, ss, E_loc * C, lo, lo + E_loc * C)
+
+        buf = jax.shard_map(
+            disp, mesh=mesh,
+            in_specs=(bspec, bspec),
+            out_specs=P(_batch_axes(mesh), "model"),
+            axis_names=set(manual),
+            check_vma=False,
+        )(x_in, slot_pair)
+        # global view: (B, msize*(E_loc*C+1), d), model-sharded on dim 1
+        h = buf.reshape(B, msize, E_loc * C + 1, d)[:, :, : E_loc * C]
+        h = h.reshape(B, E, C, d)
+        h = maybe_constrain(h, ("batch", "experts", None, "embed_act"))
+    else:
+        buf = _dispatch_local(x, slot_pair, E * C)
+        h = buf[:, : E * C].reshape(B, E, C, d)
+
+    # Pin the bf16 casts to the weights' own sharding: the partitioner
+    # otherwise FSDP-gathers the fp32 masters and converts after — 2x the
+    # gather bytes and fp32 weight buffers held across the remat schedule.
+    wi_g = maybe_constrain(params["wi_gate"].astype(dtype), ("experts", "embed", "mlp"))
+    wi_u = maybe_constrain(params["wi_up"].astype(dtype), ("experts", "embed", "mlp"))
+    wo = maybe_constrain(params["wo"].astype(dtype), ("experts", "mlp", "embed"))
+    gct = jnp.einsum("becd,edf->becf", h, wi_g)
+    up = jnp.einsum("becd,edf->becf", h, wi_u)
+    out = jnp.einsum("becf,efd->becd", jax.nn.silu(gct) * up, wo)
+
+    if manual is not None:
+        out = maybe_constrain(out, ("batch", "experts", None, "embed_act"))
+        out_flat = out.reshape(B, E * C, d)
+
+        def comb(oo, ss, gg):
+            lo = jax.lax.axis_index("model") * E_loc * C
+            y = _combine_local(oo, ss, gg, lo, lo + E_loc * C)
+            return jax.lax.psum(y, "model")
+
+        y = jax.shard_map(
+            comb, mesh=mesh,
+            in_specs=(P(_batch_axes(mesh), "model"), bspec, bspec),
+            out_specs=bspec,
+            axis_names=set(manual),
+            check_vma=False,
+        )(out_flat, slot_pair, gk_pair)
+    else:
+        out_flat = out.reshape(B, E * C, d)
+        y = _combine_local(out_flat, slot_pair, gk_pair)
+    y = maybe_constrain(y, ("batch", "seq_act", "embed_act"))
+
+    # Load-balancing aux loss (per sequence, averaged) — all local math.
+    counts = jnp.concatenate(
+        [starts[:, 1:] - starts[:, :-1], Sk - starts[:, -1:]], axis=1
+    ).astype(jnp.float32)
+    frac = counts / Sk
+    mean_p = probs.mean(axis=1)
+    aux = E * jnp.mean(jnp.sum(frac * mean_p, axis=-1))
+
+    if cfg.num_shared_experts > 0:
+        sp = params["shared"]
+        g = x @ sp["wi_gate"].astype(dtype)
+        u = x @ sp["wi_up"].astype(dtype)
+        y = y + (jax.nn.silu(g) * u) @ sp["wo"].astype(dtype)
+
+    return y, aux

@@ -1,0 +1,403 @@
+"""Recurrent mixers: RG-LRU (recurrentgemma) and mLSTM / sLSTM (xLSTM).
+
+All three carry O(1)-in-sequence decode state — these are the archs that run
+the ``long_500k`` shape.  Training/prefill paths avoid sequential scans where
+the math allows:
+
+  * RG-LRU — ``jax.lax.associative_scan`` over (decay, input) pairs
+    (log-depth; the Pallas chunked kernel is the TPU perf path);
+  * mLSTM  — chunkwise-parallel form (intra-chunk L x L attention-like
+    matrices + inter-chunk (dk x dv) state passing, exponential-gate
+    stabilizers carried per chunk);
+  * sLSTM  — genuinely sequential (gates depend on h_{t-1}); ``lax.scan``.
+
+Cache conventions:
+  rec:   {"h": (B, d_rnn), "conv": (B, w-1, d_rnn)}
+  mlstm: {"C": (B, H, dk, dv), "n": (B, H, dk), "m": (B, H), "conv": (B, w-1, d_in)}
+  slstm: {"c","n","h","m": (B, d)}
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.params import ParamSpec
+from .config import ModelConfig
+
+__all__ = [
+    "rglru_spec",
+    "apply_rglru_block",
+    "init_rglru_cache",
+    "mlstm_spec",
+    "apply_mlstm_block",
+    "init_mlstm_cache",
+    "slstm_spec",
+    "apply_slstm_block",
+    "init_slstm_cache",
+]
+
+_RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (shared by rec / mlstm blocks)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: Optional[jax.Array]) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x: (B, S, D), w: (W, D) depthwise filter. state: (B, W-1, D) history."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+W-1, D)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1) :] if W > 1 else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma)
+# ---------------------------------------------------------------------------
+
+
+def rglru_spec(cfg: ModelConfig) -> Dict:
+    d, dr, w = cfg.d_model, cfg.d_rnn, cfg.conv_width
+    return {
+        "wx_gate": ParamSpec((d, dr), ("embed", "rnn")),  # gelu branch
+        "wx_rnn": ParamSpec((d, dr), ("embed", "rnn")),  # conv+rglru branch
+        "conv_w": ParamSpec((w, dr), ("conv", "rnn"), init="normal", scale=0.1),
+        "conv_b": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "wa": ParamSpec((dr, dr), ("rnn", "rnn")),  # recurrence gate r_t
+        "ba": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "wi": ParamSpec((dr, dr), ("rnn", "rnn")),  # input gate i_t
+        "bi": ParamSpec((dr,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((dr,), ("rnn",), init="normal", scale=0.5),  # Λ
+        "wo": ParamSpec((dr, d), ("rnn", "embed")),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype),
+    }
+
+
+def rglru_cache_axes(cfg: ModelConfig) -> Dict:
+    return {"h": ("batch", "rnn"), "conv": ("batch", "conv", "rnn")}
+
+
+def mlstm_cache_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "C": ("batch", "heads", "head_dim", "head_dim"),
+        "n": ("batch", "heads", "head_dim"),
+        "m": ("batch", "heads"),
+        "conv": ("batch", "conv", "mlp"),
+    }
+
+
+def slstm_cache_axes(cfg: ModelConfig) -> Dict:
+    return {"c": ("batch", "rnn"), "n": ("batch", "rnn"), "h": ("batch", "rnn"), "m": ("batch", "rnn")}
+
+
+def _rglru_scan(log_a: jax.Array, b: jax.Array, h0: Optional[jax.Array]) -> jax.Array:
+    """h_t = exp(log_a_t) * h_{t-1} + b_t along axis 1 (fp32)."""
+
+    def combine(left, right):
+        la_l, b_l = left
+        la_r, b_r = right
+        return la_l + la_r, jnp.exp(la_r) * b_l + b_r
+
+    la, bb = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    h = bb
+    if h0 is not None:
+        h = h + jnp.exp(la) * h0[:, None]
+    return h
+
+
+def apply_rglru_block(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    dtype = x.dtype
+    gate = jax.nn.gelu(x @ params["wx_gate"].astype(dtype), approximate=True)
+    u = x @ params["wx_rnn"].astype(dtype)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"], conv_state)
+    u = u + params["conv_b"].astype(dtype)
+
+    # RG-LRU gates (fp32 recurrence for stability).
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["wa"].astype(jnp.float32) + params["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["wi"].astype(jnp.float32) + params["bi"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * uf)
+
+    h0 = cache["h"] if cache is not None else None
+    if decode:
+        assert cache is not None and x.shape[1] == 1
+        h_new = jnp.exp(log_a[:, 0]) * cache["h"] + b[:, 0]
+        h = h_new[:, None]
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        h = _rglru_scan(log_a, b, h0)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"h": h[:, -1], "conv": new_conv}
+    y = (h.astype(dtype) * gate) @ params["wo"].astype(dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = 2 * d  # up-projection factor 2 (xLSTM mLSTM block)
+    H = cfg.num_heads
+    hd = di // H
+    w = cfg.conv_width
+    return {
+        "w_up": ParamSpec((d, di), ("embed", "mlp")),
+        "w_gate": ParamSpec((d, di), ("embed", "mlp")),
+        "conv_w": ParamSpec((w, di), ("conv", "mlp"), init="normal", scale=0.1),
+        "wq": ParamSpec((di, H, hd), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((di, H, hd), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((di, H, hd), ("mlp", "heads", "head_dim")),
+        "wif": ParamSpec((di, 2 * H), ("mlp", "heads")),  # i/f gate projections
+        "bif": ParamSpec((2 * H,), ("heads",), init="zeros"),
+        "out_norm": {"scale": ParamSpec((di,), ("mlp",), init="ones")},
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    di = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = di // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def _mlstm_chunk(carry, inp, *, scale):
+    """One chunk of the chunkwise-parallel mLSTM (all fp32).
+
+    carry: (C, n, m)  —  C: (B,H,dk,dv), n: (B,H,dk), m: (B,H)
+    inp:   q,k,v: (B,L,H,hd);  li, lf: (B,H,L) log input/forget gates
+    """
+    C, n, m = carry
+    q, k, v, li, lf = inp
+    B, L, H, hd = q.shape
+    q = q.transpose(0, 2, 1, 3)  # (B,H,L,hd)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    b = jnp.cumsum(lf, axis=-1)  # (B,H,L) inclusive log-decay
+    # intra-chunk log weights: W[i,j] = b_i - b_j + li_j  (j <= i)
+    W = b[..., :, None] - b[..., None, :] + li[..., None, :]
+    tril = jnp.tril(jnp.ones((L, L), bool))
+    W = jnp.where(tril, W, -jnp.inf)
+    a_inter = b + m[..., None]  # log coeff of the carried state per row
+    m_row = jnp.maximum(jnp.max(W, axis=-1), a_inter)  # (B,H,L)
+    D = jnp.exp(W - m_row[..., None])
+    c_int = jnp.exp(a_inter - m_row)  # (B,H,L)
+
+    S = (q @ k.transpose(0, 1, 3, 2)) * scale * D  # (B,H,L,L)
+    h_num = S @ v + c_int[..., None] * ((q * scale) @ C)
+    n_vec = S.sum(-1) + c_int * jnp.einsum("bhld,bhd->bhl", q * scale, n)
+    denom = jnp.maximum(jnp.abs(n_vec), jnp.exp(-m_row))
+    h = h_num / denom[..., None]  # (B,H,L,hd_v)
+
+    # advance the state to the end of the chunk
+    bL = b[..., -1:]  # (B,H,1)
+    w_end = bL - b + li  # (B,H,L) weight of each position into the new state
+    m_new = jnp.maximum(bL[..., 0] + m, jnp.max(w_end, axis=-1))
+    scale_old = jnp.exp(bL[..., 0] + m - m_new)
+    wexp = jnp.exp(w_end - m_new[..., None])
+    C_new = scale_old[..., None, None] * C + jnp.einsum("bhl,bhld,bhle->bhde", wexp, k, v)
+    n_new = scale_old[..., None] * n + jnp.einsum("bhl,bhld->bhd", wexp, k)
+    return (C_new, n_new, m_new), h.transpose(0, 2, 1, 3)  # (B,L,H,hd)
+
+
+def apply_mlstm_block(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+    chunk: int = 256,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    dtype = x.dtype
+    B, Sq, d = x.shape
+    di = 2 * d
+    H = cfg.num_heads
+    hd = di // H
+    scale = 1.0 / math.sqrt(hd)
+
+    up = x @ params["w_up"].astype(dtype)
+    gate = x @ params["w_gate"].astype(dtype)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(up, params["conv_w"], conv_state)
+    u = jax.nn.silu(u)
+
+    q = jnp.einsum("bsd,dhk->bshk", u, params["wq"].astype(dtype)).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", u, params["wk"].astype(dtype)).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", up, params["wv"].astype(dtype)).astype(jnp.float32)
+    gif = (u @ params["wif"].astype(dtype)).astype(jnp.float32) + params["bif"].astype(jnp.float32)
+    li = gif[..., :H].transpose(0, 2, 1)  # (B,H,S) log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gif[..., H:]).transpose(0, 2, 1)  # log forget
+
+    if decode:
+        assert cache is not None and Sq == 1
+        (C, n, m), h = _mlstm_chunk(
+            (cache["C"], cache["n"], cache["m"]), (q, k, v, li, lf), scale=scale
+        )
+        new_cache = {"C": C, "n": n, "m": m, "conv": new_conv}
+    else:
+        if cache is not None:
+            state = (cache["C"], cache["n"], cache["m"])
+        else:
+            state = (
+                jnp.zeros((B, H, hd, hd), jnp.float32),
+                jnp.zeros((B, H, hd), jnp.float32),
+                jnp.full((B, H), -1e30, jnp.float32),
+            )
+        L = min(chunk, Sq)
+        if Sq % L != 0:
+            raise ValueError(f"seq {Sq} not divisible by mlstm chunk {L}")
+        nc = Sq // L
+
+        @jax.checkpoint
+        def step(carry, inp):
+            return _mlstm_chunk(carry, inp, scale=scale)
+
+        xs = tuple(
+            a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+            for a in (q, k, v)
+        ) + tuple(
+            a.reshape(B, a.shape[1], nc, L).transpose(2, 0, 1, 3) for a in (li, lf)
+        )
+        state, hs = jax.lax.scan(step, state, xs, unroll=cfg.unroll_scans)
+        h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"C": state[0], "n": state[1], "m": state[2], "conv": new_conv}
+
+    h = h.reshape(B, Sq, di).astype(dtype)
+    # per-feature RMS norm then gated output
+    hf = h.astype(jnp.float32)
+    hn = hf * jax.lax.rsqrt(jnp.mean(jnp.square(hf), -1, keepdims=True) + 1e-6)
+    h = (hn * params["out_norm"]["scale"].astype(jnp.float32)).astype(dtype)
+    y = (h * jax.nn.silu(gate)) @ params["w_down"].astype(dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def slstm_spec(cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    ff = int(math.ceil(4.0 / 3.0 * d / 64) * 64)  # post-FFN, proj factor 4/3
+    return {
+        "wx": ParamSpec((d, 4 * d), ("embed", "mlp")),  # z,i,f,o x-projections
+        "r": ParamSpec((H, hd, 4 * hd), ("heads", "head_dim", "mlp")),  # block-diag recurrent
+        "b": ParamSpec((4 * d,), ("mlp",), init="zeros"),
+        "out_norm": {"scale": ParamSpec((d,), ("embed",), init="ones")},
+        "ffn": {
+            "wi_gate": ParamSpec((d, ff), ("embed", "mlp")),
+            "wi_up": ParamSpec((d, ff), ("embed", "mlp")),
+            "wo": ParamSpec((ff, d), ("mlp", "embed")),
+        },
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def _slstm_step(params, cfg, carry, xt):
+    """One sLSTM time step (fp32). xt: (B, 4d) pre-projected gates."""
+    c, n, h, m = carry
+    B, d = c.shape
+    H = cfg.num_heads
+    hd = d // H
+    # recurrent contribution: block-diagonal per head
+    hr = h.reshape(B, H, hd)
+    rec = jnp.einsum("bhk,hkf->bhf", hr, params["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    g = xt + rec + params["b"].astype(jnp.float32)
+    z, gi, gf, go = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(go)
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    i_p = jnp.exp(gi - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm_block(
+    params: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    dtype = x.dtype
+    B, S, d = x.shape
+    xg = (x @ params["wx"].astype(dtype)).astype(jnp.float32)  # (B,S,4d)
+    if cache is not None:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z = lambda: jnp.zeros((B, d), jnp.float32)
+        carry = (z(), z(), z(), jnp.full((B, d), -1e30, jnp.float32))
+
+    if decode:
+        assert S == 1
+        carry, h = _slstm_step(params, cfg, carry, xg[:, 0])
+        hs = h[:, None]
+    else:
+        def step(c, xt):
+            return _slstm_step(params, cfg, c, xt)
+
+        carry, hs = jax.lax.scan(step, carry, xg.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": carry[0], "n": carry[1], "h": carry[2], "m": carry[3]}
+
+    hf = hs * jax.lax.rsqrt(jnp.mean(jnp.square(hs), -1, keepdims=True) + 1e-6)
+    h = (hf * params["out_norm"]["scale"].astype(jnp.float32)).astype(dtype)
+    # post gated FFN (proj factor 4/3)
+    f = params["ffn"]
+    gate = h @ f["wi_gate"].astype(dtype)
+    up = h @ f["wi_up"].astype(dtype)
+    y = (jax.nn.gelu(gate, approximate=True) * up) @ f["wo"].astype(dtype)
+    return y, new_cache

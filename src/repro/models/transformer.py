@@ -1,0 +1,462 @@
+"""Decoder-LM assembly: blocks, scan-over-layers, caches, loss.
+
+Depth is organized as ``prefix`` (unscanned, e.g. deepseek-v2's dense first
+layer) + ``num_units`` repetitions of ``cfg.pattern`` scanned with
+``jax.lax.scan`` over stacked parameters (one XLA program per *pattern unit*
+regardless of depth — compile time for granite-20b's 52 layers equals one
+unit).  ``cfg.remat == "full"`` wraps the unit body in ``jax.checkpoint``.
+
+Cache pytree: ``{"prefix": (per-layer,), "units": (per-slot stacked,)}`` —
+slot caches carry a leading ``num_units`` dim and thread through the scan as
+xs/ys; hidden state is the carry.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.params import ParamSpec
+from ..sharding.context import maybe_constrain
+from .attention import (
+    apply_attn,
+    apply_mla,
+    attn_spec,
+    init_attn_cache,
+    init_mla_cache,
+    mla_spec,
+)
+from .config import ModelConfig
+from .layers import apply_mlp, apply_norm, embedding_spec, mlp_spec, norm_spec, softcap, stacked
+from .moe import apply_moe, moe_spec
+from .recurrent import (
+    apply_mlstm_block,
+    apply_rglru_block,
+    apply_slstm_block,
+    init_mlstm_cache,
+    init_rglru_cache,
+    init_slstm_cache,
+    mlstm_spec,
+    rglru_spec,
+    slstm_spec,
+)
+
+__all__ = [
+    "lm_spec",
+    "apply_lm",
+    "lm_logits",
+    "lm_loss",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "block_spec",
+    "apply_block",
+]
+
+_SELF_CONTAINED = ("mlstm", "slstm")  # kinds with no separate MLP sub-layer
+
+
+# ---------------------------------------------------------------------------
+# Block spec / apply
+# ---------------------------------------------------------------------------
+
+
+def block_spec(cfg: ModelConfig, kind: str, *, moe: bool, d_ff: int, cross: bool = False) -> Dict:
+    if kind == "mlstm":
+        return {"norm": norm_spec(cfg.d_model, cfg.norm_kind), "mix": mlstm_spec(cfg)}
+    if kind == "slstm":
+        return {"norm": norm_spec(cfg.d_model, cfg.norm_kind), "mix": slstm_spec(cfg)}
+    spec: Dict[str, Any] = {"norm1": norm_spec(cfg.d_model, cfg.norm_kind)}
+    if kind in ("attn", "local"):
+        spec["attn"] = mla_spec(cfg) if cfg.mla else attn_spec(cfg)
+    elif kind == "rec":
+        spec["rec"] = rglru_spec(cfg)
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    if cross:
+        spec["norm_x"] = norm_spec(cfg.d_model, cfg.norm_kind)
+        spec["xattn"] = attn_spec(cfg, cross=True)
+    spec["norm2"] = norm_spec(cfg.d_model, cfg.norm_kind)
+    spec["mlp"] = moe_spec(cfg) if moe else mlp_spec(cfg.d_model, d_ff, cfg.mlp_kind)
+    if cfg.post_norms:
+        spec["post_norm1"] = norm_spec(cfg.d_model, cfg.norm_kind)
+        spec["post_norm2"] = norm_spec(cfg.d_model, cfg.norm_kind)
+    return spec
+
+
+def apply_block(
+    params: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    moe: bool,
+    cache: Optional[Dict] = None,
+    decode: bool = False,
+    causal: bool = True,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+
+    if kind in _SELF_CONTAINED:
+        h = apply_norm(params["norm"], x)
+        fn = apply_mlstm_block if kind == "mlstm" else apply_slstm_block
+        y, new_cache = fn(params["mix"], cfg, h, cache=cache, decode=decode)
+        return x + y, new_cache, aux
+
+    h = apply_norm(params["norm1"], x)
+    if kind in ("attn", "local"):
+        if cfg.mla:
+            y, new_cache = apply_mla(params["attn"], cfg, h, positions, cache=cache, decode=decode)
+        else:
+            y, new_cache = apply_attn(
+                params["attn"], cfg, h, positions, kind=kind, causal=causal,
+                cache=cache, decode=decode,
+            )
+    else:  # rec
+        y, new_cache = apply_rglru_block(params["rec"], cfg, h, cache=cache, decode=decode)
+    if cfg.post_norms:
+        y = apply_norm(params["post_norm1"], y)
+    x = x + y
+
+    if cross_kv is not None:
+        h = apply_norm(params["norm_x"], x)
+        y, _ = apply_attn(
+            params["xattn"], cfg, h, positions, kind="attn", causal=False, cross_kv=cross_kv
+        )
+        x = x + y
+
+    h = apply_norm(params["norm2"], x)
+    if moe:
+        y, aux = apply_moe(params["mlp"], cfg, h)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg.mlp_kind)
+    if cfg.post_norms:
+        y = apply_norm(params["post_norm2"], y)
+    return x + y, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model spec
+# ---------------------------------------------------------------------------
+
+
+def _layer_is_moe(cfg: ModelConfig, kind: str, in_prefix: bool) -> bool:
+    return cfg.is_moe and not in_prefix and kind not in _SELF_CONTAINED
+
+
+def lm_spec(cfg: ModelConfig) -> Dict:
+    spec: Dict[str, Any] = {"embed": embedding_spec(cfg.vocab_size, cfg.d_model)}
+    spec["prefix"] = tuple(
+        block_spec(cfg, k, moe=False, d_ff=cfg.prefix_dense_ff or cfg.d_ff)
+        for k in cfg.prefix
+    )
+    spec["units"] = tuple(
+        stacked(block_spec(cfg, k, moe=_layer_is_moe(cfg, k, False), d_ff=cfg.d_ff), cfg.num_units)
+        for k in cfg.pattern
+    )
+    spec["final_norm"] = norm_spec(cfg.d_model, cfg.norm_kind)
+    if not cfg.tie_embeddings:
+        spec["head"] = ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def _kind_cache(cfg: ModelConfig, kind: str, batch: int, seq_budget: int, dtype):
+    if kind in ("attn", "local"):
+        if cfg.mla:
+            return init_mla_cache(cfg, batch, seq_budget, dtype)
+        return init_attn_cache(cfg, kind, batch, seq_budget, dtype)
+    if kind == "rec":
+        return init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def _kind_cache_axes(cfg: ModelConfig, kind: str):
+    from .attention import attn_cache_axes, mla_cache_axes
+    from .recurrent import mlstm_cache_axes, rglru_cache_axes, slstm_cache_axes
+
+    if kind in ("attn", "local"):
+        return mla_cache_axes(cfg) if cfg.mla else attn_cache_axes(cfg, kind)
+    if kind == "rec":
+        return rglru_cache_axes(cfg)
+    if kind == "mlstm":
+        return mlstm_cache_axes(cfg)
+    if kind == "slstm":
+        return slstm_cache_axes(cfg)
+    raise ValueError(kind)
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical-axes tree mirroring ``init_cache`` (units get a leading
+    'layers' stack axis)."""
+    prefix = tuple(_kind_cache_axes(cfg, k) for k in cfg.prefix)
+    units = tuple(
+        jax.tree_util.tree_map(
+            lambda a: ("layers",) + a,
+            _kind_cache_axes(cfg, k),
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+        for k in cfg.pattern
+    )
+    return {"prefix": prefix, "units": units}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_budget: int, dtype=jnp.bfloat16) -> Dict:
+    prefix = tuple(_kind_cache(cfg, k, batch, seq_budget, dtype) for k in cfg.prefix)
+    units = tuple(
+        jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_units,) + a.shape).copy()
+            if isinstance(a, jax.Array)
+            else a,
+            _kind_cache(cfg, k, batch, seq_budget, dtype),
+        )
+        for k in cfg.pattern
+    )
+    return {"prefix": prefix, "units": units}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params: Dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    # Cast BEFORE the gather: the SPMD partitioner then keeps the
+    # vocab-sharded table local (masked partial gather + psum of (B,S,d))
+    # instead of all-gathering the fp32 master table every step.
+    e = params["embed"]["embedding"].astype(cfg.dtype)
+    x = e[tokens]
+    if cfg.embed_scale != 1.0:
+        x = x * jnp.asarray(cfg.embed_scale, cfg.dtype)
+    return x
+
+
+def apply_lm(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S_text)
+    positions: jax.Array,  # (S,) over the FULL sequence (prefix + text)
+    *,
+    caches: Optional[Dict] = None,
+    decode: bool = False,
+    prefix_embeds: Optional[jax.Array] = None,  # (B, P, d) modality stub
+    cross_kv_units: Optional[Tuple] = None,  # enc-dec decoder use
+    causal: bool = True,
+) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (hidden (B,S,d), new_caches, aux_loss_sum)."""
+    x = _embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = maybe_constrain(x, ("batch", "seq_act", "embed_act"))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    new_prefix = []
+    for i, kind in enumerate(cfg.prefix):
+        c = caches["prefix"][i] if caches is not None else None
+        x, nc, aux = apply_block(
+            params["prefix"][i], cfg, kind, x, positions,
+            moe=False, cache=c, decode=decode, causal=causal,
+        )
+        new_prefix.append(nc)
+        aux_total += aux
+
+    # Scanned units.
+    n_slots = len(cfg.pattern)
+    unit_params = params["units"]
+    unit_caches = caches["units"] if caches is not None else None
+
+    def unit_body(x, slot_params, slot_caches):
+        # Sequence-sharded residual stream (no-op without an active mesh);
+        # the remat-stored scan carry inherits this sharding.
+        x = maybe_constrain(x, ("batch", "seq_act", "embed_act"))
+        new_slot_caches = []
+        aux_u = jnp.zeros((), jnp.float32)
+        for s, kind in enumerate(cfg.pattern):
+            c = slot_caches[s] if slot_caches is not None else None
+            xkv = cross_kv_units[s] if cross_kv_units is not None else None
+            x, nc, aux = apply_block(
+                slot_params[s], cfg, kind, x, positions,
+                moe=_layer_is_moe(cfg, kind, False), cache=c, decode=decode,
+                causal=causal, cross_kv=xkv,
+            )
+            new_slot_caches.append(nc)
+            aux_u += aux
+        return x, tuple(new_slot_caches), aux_u
+
+    if cfg.remat == "full":
+        unit_body = jax.checkpoint(unit_body)
+
+    if cfg.scan_layers and cfg.num_units > 0:
+        if unit_caches is None:
+            def scan_fn(carry, xs):
+                x, aux_acc = carry
+                x, _, aux_u = unit_body(x, xs, None)
+                return (x, aux_acc + aux_u), None
+
+            (x, aux_total), _ = jax.lax.scan(scan_fn, (x, aux_total), unit_params)
+            new_units = None
+        else:
+            def scan_fn(carry, xs):
+                x, aux_acc = carry
+                sp, sc = xs
+                x, ncs, aux_u = unit_body(x, sp, sc)
+                return (x, aux_acc + aux_u), ncs
+
+            (x, aux_total), new_units = jax.lax.scan(
+                scan_fn, (x, aux_total), (unit_params, unit_caches)
+            )
+    else:
+        new_units_list = []
+        for u in range(cfg.num_units):
+            sp = jax.tree_util.tree_map(lambda a: a[u], unit_params)
+            sc = (
+                jax.tree_util.tree_map(lambda a: a[u], unit_caches)
+                if unit_caches is not None
+                else None
+            )
+            x, ncs, aux_u = unit_body(x, sp, sc)
+            aux_total += aux_u
+            new_units_list.append(ncs)
+        new_units = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_units_list)
+            if unit_caches is not None
+            else None
+        )
+
+    x = apply_norm(params["final_norm"], x)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"prefix": tuple(new_prefix), "units": new_units}
+    return x, new_caches, aux_total
+
+
+def lm_logits(params: Dict, cfg: ModelConfig, hidden: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["embedding"].T
+    else:
+        w = params["head"]
+    logits = (hidden @ w.astype(hidden.dtype)).astype(cfg.logit_dtype)
+    return softcap(logits, cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked cross-entropy over sequence)
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(
+    params: Dict,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: tokens (B,S), labels (B,S) int32 (-1 = ignore),
+    optional prefix_embeds (B,P,d).  Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    prefix_embeds = batch.get("prefix_embeds")
+    B, S_text = tokens.shape
+    P = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    S = S_text + P
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    hidden, _, aux = apply_lm(
+        params, cfg, tokens, positions, prefix_embeds=prefix_embeds
+    )
+    hidden = hidden[:, P:]  # loss over text positions only
+
+    if cfg.tie_embeddings:
+        w = params["embed"]["embedding"].T
+    else:
+        w = params["head"]
+    w = w.astype(hidden.dtype)
+
+    L = cfg.xent_chunk if cfg.xent_chunk > 0 else S_text
+    L = min(L, S_text)
+    if S_text % L != 0:
+        L = S_text  # fall back to unchunked for odd sizes
+    nc = S_text // L
+    h_ch = hidden.reshape(B, nc, L, -1).transpose(1, 0, 2, 3)
+    y_ch = labels.reshape(B, nc, L).transpose(1, 0, 2)
+
+    # checkpoint: the backward otherwise stores every chunk's fp32 logits
+    # stacked — the very buffer the chunking bounds.
+    @jax.checkpoint
+    def chunk_fn(acc, inp):
+        h, y = inp
+        logits = (h @ w).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_softcap)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.clip(y, 0)[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        zl = jnp.square(lse) * mask
+        return (
+            acc[0] + nll.sum(),
+            acc[1] + mask.sum(),
+            acc[2] + zl.sum(),
+        ), None
+
+    (nll_sum, cnt, zl_sum), _ = jax.lax.scan(
+        chunk_fn, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (h_ch, y_ch),
+        unroll=cfg.unroll_scans,
+    )
+    denom = jnp.maximum(cnt, 1.0)
+    loss = nll_sum / denom
+    if cfg.zloss > 0:
+        loss = loss + cfg.zloss * zl_sum / denom
+    if cfg.is_moe:
+        loss = loss + cfg.aux_loss_weight * aux / max(cfg.num_layers, 1)
+    metrics = {"nll": nll_sum / denom, "tokens": cnt, "aux": aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    caches: Dict,
+    *,
+    prefix_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Run the prompt through the model, filling caches; returns
+    (last-position logits (B, V), caches)."""
+    B, S_text = tokens.shape
+    P = prefix_embeds.shape[1] if prefix_embeds is not None else 0
+    positions = jnp.arange(S_text + P, dtype=jnp.int32)
+    hidden, caches, _ = apply_lm(
+        params, cfg, tokens, positions, caches=caches, prefix_embeds=prefix_embeds
+    )
+    return lm_logits(params, cfg, hidden[:, -1:])[:, 0], caches
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,  # (B, 1)
+    pos: jax.Array,  # () int32 — absolute position of this token
+    caches: Dict,
+) -> Tuple[jax.Array, Dict]:
+    positions = pos[None].astype(jnp.int32)
+    hidden, caches, _ = apply_lm(
+        params, cfg, token, positions, caches=caches, decode=True
+    )
+    return lm_logits(params, cfg, hidden[:, 0]), caches

@@ -1,0 +1,3 @@
+from .params import ParamSpec, axes_tree, init_tree, param_count, spec_tree_shapes
+
+__all__ = ["ParamSpec", "axes_tree", "init_tree", "param_count", "spec_tree_shapes"]

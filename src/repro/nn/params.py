@@ -1,0 +1,114 @@
+"""Minimal functional parameter system (no flax dependency).
+
+A model is described by a *spec tree*: a nested dict whose leaves are
+``ParamSpec`` (shape, dtype, initializer, logical sharding axes).  From one
+spec tree we derive everything the framework needs:
+
+  * ``init_tree(key, spec)``        — materialized parameters (jnp arrays);
+  * ``axes_tree(spec)``             — same-structure tree of logical-axis
+    tuples, consumed by ``repro.sharding`` to build NamedShardings;
+  * ``jax.eval_shape`` compatibility — specs never allocate, so the dry-run
+    can build ShapeDtypeStructs for 236B-parameter models on one CPU.
+
+Logical axis names (see ``repro/sharding/rules.py``):
+``batch, seq, embed, heads, kv_heads, head_dim, mlp, vocab, experts, layers,
+conv, rnn, lora, stack, null``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_tree", "axes_tree", "spec_tree_shapes", "param_count"]
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def _normal_init(stddev: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return init
+
+
+def _zeros_init(key, shape, dtype):  # noqa: ARG001
+    return jnp.zeros(shape, dtype)
+
+
+def _ones_init(key, shape, dtype):  # noqa: ARG001
+    return jnp.ones(shape, dtype)
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis per dim ('null'/None = replicated)
+    dtype: Any = jnp.float32
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} rank mismatch")
+
+    def initializer(self) -> Initializer:
+        if self.init == "zeros":
+            return _zeros_init
+        if self.init == "ones":
+            return _ones_init
+        if self.init == "normal":
+            return _normal_init(self.scale)
+        if self.init == "fan_in":
+            fan_in = self.shape[0] if len(self.shape) >= 2 else max(self.shape[0], 1)
+            # stacked layers: leading 'layers'/'stack'/'experts' dims are not fan-in
+            skip = 0
+            for ax in self.axes:
+                if ax in ("layers", "stack", "experts") and skip < len(self.shape) - 2:
+                    skip += 1
+                else:
+                    break
+            if len(self.shape) - skip >= 2:
+                fan_in = int(np.prod(self.shape[skip:-1]))
+            return _normal_init(self.scale / math.sqrt(max(fan_in, 1)))
+        if self.init == "scaled":
+            return _normal_init(self.scale)
+        raise ValueError(f"unknown init {self.init}")
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(key: jax.Array, spec: Dict) -> Dict:
+    """Materialize a spec tree into a parameter tree (single traversal, one
+    fold of the PRNG key per leaf, order-stable)."""
+    leaves, treedef = jax.tree_util.tree_flatten(spec, is_leaf=_is_spec)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = [l.initializer()(k, l.shape, l.dtype) for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def axes_tree(spec: Dict) -> Dict:
+    """Extract the logical-axes tree (leaves: tuples of axis names)."""
+    return jax.tree_util.tree_map(lambda l: l.axes, spec, is_leaf=_is_spec)
+
+
+def spec_tree_shapes(spec: Dict) -> Dict:
+    """ShapeDtypeStruct tree — the dry-run's no-allocation stand-in."""
+    return jax.tree_util.tree_map(lambda l: l.abstract(), spec, is_leaf=_is_spec)
+
+
+def param_count(spec: Dict) -> int:
+    leaves = jax.tree_util.tree_leaves(spec, is_leaf=_is_spec)
+    return sum(int(np.prod(l.shape)) for l in leaves)

@@ -1,0 +1,55 @@
+"""Gradient compression for the inter-group (DCN) all-reduce.
+
+Groups in the DFPA training runtime synchronize gradients over the slow
+cross-pod fabric once per global step; compression cuts those bytes:
+
+  * ``compress_bf16`` — 2x: cast fp32 grads to bf16 for the wire;
+  * ``compress_int8_ef`` — 4x: per-tensor absmax int8 quantization with
+    ERROR FEEDBACK: the quantization residual is carried into the next
+    step's gradient, making the compression unbiased over time (Seide et
+    al. / DGC-style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["compress_bf16", "compress_int8_ef", "decompress_int8"]
+
+
+def compress_bf16(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def compress_int8_ef(grads, error: Any) -> Tuple[Any, Any, Any]:
+    """Returns (q_int8_tree, scales_tree, new_error_tree).
+
+    ``error`` is the carried residual pytree (zeros at step 0).
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_e = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    qs, scales, errs = [], [], []
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = one(g, e)
+        qs.append(q)
+        scales.append(s)
+        errs.append(ne)
+    unf = lambda xs: jax.tree_util.tree_unflatten(treedef, xs)
+    return unf(qs), unf(scales), unf(errs)
+
+
+def decompress_int8(q_tree, scales_tree):
+    return jax.tree_util.tree_map(
+        lambda q, s: q.astype(jnp.float32) * s, q_tree, scales_tree
+    )

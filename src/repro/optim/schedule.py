@@ -1,0 +1,22 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine"]
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, *, floor: float = 0.1):
+    """Linear warmup -> cosine decay to ``floor * peak_lr``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * (step + 1.0) / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule

@@ -1,0 +1,15 @@
+from .train_loop import TrainState, make_train_step, init_train_state, loss_for_config
+from .balance import BalanceController, GroupTimer
+from .straggler import StragglerDetector
+from .elastic import elastic_rebalance
+
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "init_train_state",
+    "loss_for_config",
+    "BalanceController",
+    "GroupTimer",
+    "StragglerDetector",
+    "elastic_rebalance",
+]

@@ -1,0 +1,121 @@
+"""BalanceController: the paper's DFPA running ONLINE inside training.
+
+The paper runs dedicated benchmark rounds; in a training loop every global
+step already measures exactly what DFPA needs — ``t_i(d_i)`` for the current
+distribution — so probing is FREE (beyond-paper integration; flagged in
+DESIGN.md).  The controller:
+
+  1. starts from the even distribution (or a warm start from checkpointed
+     FPM points after an elastic event);
+  2. after each global step, folds the observed per-group times into the
+     piecewise-linear FPM estimates (the paper's step 5);
+  3. when the imbalance exceeds ``eps``, re-partitions the units with the
+     geometric algorithm of [16] (the paper's step 3) — next step runs the
+     new distribution;
+  4. exposes its FPM points for checkpointing (self-adaptability across
+     restarts) and for the straggler detector.
+
+EMA smoothing (``smooth``) de-noises wall-clock measurements — the paper's
+deterministic-benchmark assumption does not hold for real step times.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..core.fpm import PiecewiseLinearFPM, imbalance
+from ..core.partition import partition_units
+
+__all__ = ["BalanceController", "GroupTimer"]
+
+
+@dataclass
+class GroupTimer:
+    """Host-side wall-clock timing of one group's step (the paper's
+    ``t_i(d_i)`` measurement)."""
+
+    _t0: float = 0.0
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        return time.perf_counter() - self._t0
+
+
+@dataclass
+class BalanceController:
+    n_units: int  # units per global step (microbatches)
+    num_groups: int
+    eps: float = 0.1
+    min_units: int = 1
+    smooth: float = 0.5  # EMA weight of the newest observation
+    caps: Optional[Sequence[int]] = None  # per-group HBM unit capacity
+
+    models: List[PiecewiseLinearFPM] = field(default_factory=list)
+    d: List[int] = field(default_factory=list)
+    _ema: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    rebalances: int = 0
+    steps_observed: int = 0
+
+    def __post_init__(self):
+        if not self.models:
+            self.models = [PiecewiseLinearFPM() for _ in range(self.num_groups)]
+        if not self.d:
+            base, rem = divmod(self.n_units, self.num_groups)
+            self.d = [base + (1 if i < rem else 0) for i in range(self.num_groups)]
+
+    # -- the online DFPA loop -------------------------------------------------
+
+    def observe(self, times: Sequence[float]) -> bool:
+        """Fold one global step's per-group times in; returns True if the
+        distribution changed (callers must re-split the next step's units)."""
+        if len(times) != self.num_groups:
+            raise ValueError("times length != num_groups")
+        self.steps_observed += 1
+        for i, (di, ti) in enumerate(zip(self.d, times)):
+            if di <= 0 or ti <= 0:
+                continue
+            key = (i, di)
+            ema = self._ema.get(key)
+            ema = ti if ema is None else (1 - self.smooth) * ema + self.smooth * ti
+            self._ema[key] = ema
+            self.models[i].add_point(float(di), di / ema)
+        if imbalance([t for t in times if t > 0]) <= self.eps:
+            return False
+        new_d = partition_units(
+            self.models, self.n_units, self.caps, min_units=self.min_units
+        )
+        if new_d == self.d:
+            return False
+        self.d = new_d
+        self.rebalances += 1
+        return True
+
+    @property
+    def imbalance_estimate(self) -> float:
+        ts = [m.time(di) for m, di in zip(self.models, self.d) if di > 0 and m.num_points]
+        return imbalance(ts) if len(ts) >= 2 else 0.0
+
+    # -- persistence (self-adaptability across restarts) ----------------------
+
+    def state_dict(self) -> Dict:
+        return {
+            "n_units": self.n_units,
+            "d": list(self.d),
+            "points": [m.as_points() for m in self.models],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict, *, eps: float = 0.1, **kw) -> "BalanceController":
+        models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
+        return cls(
+            n_units=state["n_units"],
+            num_groups=len(models),
+            eps=eps,
+            models=models,
+            d=list(state["d"]),
+            **kw,
+        )

@@ -1,0 +1,92 @@
+"""Serving: prefill/decode engine + DFPA-balanced request dispatch.
+
+Serving is the second place the paper's model fits naturally: per-replica
+decode throughput is a *nonlinear* function of batch size (KV-cache
+bandwidth, batch-dependent kernel efficiency, HBM spill past a batch
+threshold) — a speed function s(x), unknown a priori on a heterogeneous
+fleet.  ``ReplicaDispatcher`` runs DFPA over request chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.dfpa import DFPAResult, dfpa
+from ..core.executor import Executor, RoundLog
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, init_cache, prefill
+
+__all__ = ["ServeEngine", "ReplicaDispatcher"]
+
+
+class ServeEngine:
+    """Single-replica engine: jit'd prefill + decode with a fixed KV budget."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch: int, seq_budget: int):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch
+        self.seq_budget = seq_budget
+        self._prefill = jax.jit(functools.partial(prefill, cfg=cfg))
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg))
+
+    def new_cache(self):
+        return init_cache(self.cfg, self.batch, self.seq_budget, self.cfg.dtype)
+
+    def generate(
+        self, tokens: jax.Array, max_new: int, *, greedy: bool = True
+    ) -> jax.Array:
+        """tokens: (B, S_prompt) -> (B, max_new) generated ids."""
+        caches = self.new_cache()
+        logits, caches = self._prefill(params=self.params, tokens=tokens, caches=caches)
+        out = []
+        pos = tokens.shape[1]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+        for i in range(1, max_new):
+            logits, caches = self._decode(
+                params=self.params, token=tok, pos=jnp.asarray(pos, jnp.int32),
+                caches=caches,
+            )
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            out.append(tok)
+            pos += 1
+        return jnp.concatenate(out, axis=1)
+
+
+@dataclass
+class ReplicaDispatcher:
+    """DFPA over request chunks across heterogeneous serving replicas.
+
+    ``replica_run(i, x)`` must process ``x`` request chunks on replica ``i``
+    and return the wall time (real engines or simulators both fit).
+    """
+
+    replica_run: Callable[[int, int], float]
+    num_replicas: int
+    eps: float = 0.1
+    logs: List[RoundLog] = field(default_factory=list)
+
+    @property
+    def num_procs(self) -> int:
+        return self.num_replicas
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        times = [
+            self.replica_run(i, int(x)) if x > 0 else 0.0 for i, x in enumerate(d)
+        ]
+        self.logs.append(RoundLog(list(map(int, d)), times, max(times)))
+        return times
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times)
+
+    def balance(self, n_chunks: int, **kw) -> DFPAResult:
+        """Find the balanced chunk distribution for this fleet."""
+        return dfpa(self, n_chunks, self.eps, **kw)

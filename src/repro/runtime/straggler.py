@@ -1,0 +1,83 @@
+"""Straggler mitigation via FPM residuals (beyond-paper use of the model).
+
+The paper's FPM predicts what a healthy group's step SHOULD take at its
+current allocation.  A group whose observed time exceeds its own prediction
+by ``factor`` for ``patience`` consecutive steps is flagged:
+
+  * REPROFILE — its FPM points are stale (thermal throttling, recovered
+    preemption): invalidate them so DFPA re-learns the speed function;
+  * QUARANTINE — persistent (factor_hard) offender: remove from the group
+    set entirely (the elastic path redistributes its units).
+
+This turns the paper's performance model into a health detector — the
+observation→model→action loop the paper uses for balance, reused for fault
+tolerance.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional
+
+from ..core.fpm import PiecewiseLinearFPM
+
+__all__ = ["StragglerAction", "StragglerDetector"]
+
+
+class StragglerAction(Enum):
+    NONE = "none"
+    REPROFILE = "reprofile"
+    QUARANTINE = "quarantine"
+
+
+@dataclass
+class StragglerDetector:
+    factor: float = 1.5  # observed / predicted ratio that counts as a strike
+    factor_hard: float = 3.0  # instant-escalation ratio
+    patience: int = 3  # consecutive strikes before REPROFILE
+    patience_hard: int = 6  # consecutive strikes before QUARANTINE
+
+    strikes: Dict[int, int] = field(default_factory=dict)
+    history: List[tuple] = field(default_factory=list)
+
+    def update(
+        self,
+        group: int,
+        model: PiecewiseLinearFPM,
+        d_units: int,
+        observed_t: float,
+    ) -> StragglerAction:
+        if model.num_points == 0 or d_units <= 0 or observed_t <= 0:
+            return StragglerAction.NONE
+        predicted = model.time(float(d_units))
+        if predicted <= 0:
+            return StragglerAction.NONE
+        ratio = observed_t / predicted
+        self.history.append((group, d_units, predicted, observed_t, ratio))
+        if ratio < self.factor:
+            self.strikes[group] = 0
+            return StragglerAction.NONE
+        s = self.strikes.get(group, 0) + (2 if ratio >= self.factor_hard else 1)
+        self.strikes[group] = s
+        if s >= self.patience_hard:
+            self.strikes[group] = 0
+            return StragglerAction.QUARANTINE
+        if s >= self.patience:
+            return StragglerAction.REPROFILE
+        return StragglerAction.NONE
+
+    def reprofile(self, controller, group: int) -> None:
+        """Invalidate a group's FPM (keep only the freshest operating point
+        so the partitioner stays feasible)."""
+        m = controller.models[group]
+        if m.num_points > 1:
+            # keep the most recent point at the current allocation if present
+            di = controller.d[group]
+            pts = [(x, s) for x, s in m.as_points() if x == float(di)]
+            controller.models[group] = (
+                PiecewiseLinearFPM.from_points(pts) if pts else PiecewiseLinearFPM()
+            )
+        keys = [k for k in controller._ema if k[0] == group]
+        for k in keys:
+            del controller._ema[k]

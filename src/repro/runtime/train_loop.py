@@ -1,0 +1,124 @@
+"""Training step factory: mixed precision, gradient accumulation, sharding.
+
+The DFPA integration point: a group's step processes ``A`` microbatches
+(units) via an inner ``lax.scan`` — gradient accumulation length IS the
+paper's per-processor allocation ``d_i``.  Different groups jit the same
+program with different ``A``; shapes inside one program stay static (the
+SPMD constraint, DESIGN.md §2).
+
+Overlap note: inter-group (DCN) gradient reduction is dispatched as soon as
+the local accumulation finishes while the host prepares the next step's
+units (async dispatch); intra-step, XLA overlaps the FSDP all-gathers with
+compute under the sharding rules.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.encdec import encdec_loss, encdec_spec
+from ..models.transformer import lm_loss, lm_spec
+from ..nn.params import init_tree
+from ..optim import AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "make_train_step", "loss_for_config"]
+
+
+class TrainState(NamedTuple):
+    params: Any  # fp32 master weights
+    opt: AdamWState
+    step: jax.Array  # () int32
+
+
+def model_spec_for(cfg: ModelConfig):
+    return encdec_spec(cfg) if cfg.is_encdec else lm_spec(cfg)
+
+
+def loss_for_config(cfg: ModelConfig) -> Callable:
+    return (lambda p, b: encdec_loss(p, cfg, b)) if cfg.is_encdec else (
+        lambda p, b: lm_loss(p, cfg, b)
+    )
+
+
+def init_train_state(cfg: ModelConfig, key: jax.Array, *, moment_dtype=None) -> TrainState:
+    params = init_tree(key, model_spec_for(cfg))
+    return TrainState(
+        params=params,
+        opt=adamw_init(params, moment_dtype=moment_dtype),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    lr_schedule: Callable[[jax.Array], jax.Array],
+    *,
+    accum_steps: int = 1,
+    weight_decay: float = 0.1,
+    max_grad_norm: float = 1.0,
+    b1: float = 0.9,
+    b2: float = 0.95,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``accum_steps == 1``: batch leaves are (B, ...).
+    ``accum_steps == A > 1``: batch leaves are (A, mb, ...) — one leading
+    unit dim, scanned; gradients averaged over units.
+    """
+    loss_fn = loss_for_config(cfg)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state.params
+        if accum_steps == 1:
+            # accept a stacked single unit (1, mb, ...) from unit batchers
+            tok = batch.get("tokens")
+            if tok is not None and tok.ndim == 3 and tok.shape[0] == 1:
+                batch = jax.tree_util.tree_map(lambda a: a[0], batch)
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, micro):
+                g_acc, l_acc = acc
+                loss, _, grads = grads_of(params, micro)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros(())), batch, length=accum_steps,
+                unroll=cfg.unroll_scans,
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {}
+
+        lr = lr_schedule(state.step)
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads,
+            state.opt,
+            params,
+            lr=lr,
+            b1=b1,
+            b2=b2,
+            weight_decay=weight_decay,
+            max_grad_norm=max_grad_norm,
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

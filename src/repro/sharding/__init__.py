@@ -1,0 +1,19 @@
+from .context import activation_sharding, current_activation_mesh, maybe_constrain
+from .rules import (
+    LOGICAL_RULES,
+    batch_pspec,
+    logical_to_pspec,
+    shardings_for_axes,
+    shardings_for_spec,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "activation_sharding",
+    "batch_pspec",
+    "current_activation_mesh",
+    "logical_to_pspec",
+    "maybe_constrain",
+    "shardings_for_axes",
+    "shardings_for_spec",
+]

@@ -1,0 +1,58 @@
+"""Ambient activation-sharding context.
+
+Model code is mesh-agnostic; the launcher activates a mesh around tracing:
+
+    with activation_sharding(mesh):
+        jax.jit(train_step).lower(...)
+
+``maybe_constrain(x, axes)`` then pins activations to the mesh (with the
+same divisibility fallbacks as parameters) — the key use is SEQUENCE-SHARDED
+residuals between scanned blocks (``seq_act -> model``): the remat-stored
+carry of a 60-layer scan drops 16x, which is what lets the 20B+ dense
+configs fit HBM at train_4k (Megatron/Ulysses-style sequence parallelism,
+expressed as an XLA sharding constraint).  Without an active mesh it is an
+identity — tests and single-host runs never see it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .rules import LOGICAL_RULES, logical_to_pspec
+
+__all__ = ["activation_sharding", "maybe_constrain", "current_activation_mesh"]
+
+_ACT_MESH: ContextVar[Optional[Mesh]] = ContextVar("repro_activation_mesh", default=None)
+
+# Activation-specific logical axes.
+ACT_RULES = dict(LOGICAL_RULES)
+ACT_RULES.update({
+    "seq_act": ("model",),  # sequence-sharded residual stream between blocks
+    "embed_act": (),
+})
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Optional[Mesh]):
+    tok = _ACT_MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACT_MESH.reset(tok)
+
+
+def current_activation_mesh() -> Optional[Mesh]:
+    return _ACT_MESH.get()
+
+
+def maybe_constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    mesh = _ACT_MESH.get()
+    if mesh is None:
+        return x
+    ps = logical_to_pspec(axes, mesh, x.shape, rules=ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, ps))

@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style) with
+divisibility fallback.
+
+Parameters/activations carry *logical* axis names (``repro.nn.ParamSpec``);
+this module maps them onto the physical mesh:
+
+  * ``batch``  -> ("pod", "data")   — data parallelism across pods & slices;
+  * ``embed``  -> ("data",)         — FSDP / ZeRO-3 parameter sharding;
+  * ``heads/kv_heads/mlp/vocab/experts/rnn`` -> ("model",) — tensor/expert
+    parallelism;
+  * everything else replicated.
+
+Fallbacks keep every (arch x mesh) cell lowerable instead of failing:
+  1. a mesh axis already used by an earlier dim of the same tensor is
+     skipped (e.g. MoE ``wi: (experts, embed, mlp)`` — ``experts`` takes
+     ``model``, so ``mlp`` replicates);
+  2. a mesh axis whose size does not divide the dim is dropped (granite's
+     kv=1 MQA replicates KV heads instead of failing on model=16).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..nn.params import ParamSpec, axes_tree
+
+__all__ = [
+    "LOGICAL_RULES",
+    "logical_to_pspec",
+    "batch_pspec",
+    "shardings_for_axes",
+    "shardings_for_spec",
+]
+
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "seq": (),  # sequence parallelism is opt-in via override rules
+    "seq_kv": ("model",),  # KV-cache sequence sharding (MLA / MQA decode)
+    "lora": (),
+    "head_dim": (),
+    "layers": (),
+    "stack": (),
+    "conv": (),
+    "null": (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_pspec(
+    axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    shape: Optional[Sequence[int]] = None,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+) -> P:
+    """Map logical axes -> PartitionSpec under ``mesh`` with fallbacks."""
+    rules = rules or LOGICAL_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for i, name in enumerate(axes):
+        entry: Tuple[str, ...] = ()
+        if name is not None and name != "null":
+            entry = tuple(a for a in rules.get(name, ()) if a in sizes)
+        # fallback 1: drop already-used mesh axes
+        entry = tuple(a for a in entry if a not in used)
+        # fallback 2: divisibility — drop trailing axes until they divide
+        if shape is not None and entry:
+            dim = shape[i]
+            while entry:
+                prod = 1
+                for a in entry:
+                    prod *= sizes[a]
+                if dim % prod == 0:
+                    break
+                entry = entry[:-1]
+        used.update(entry)
+        if len(entry) == 0:
+            out.append(None)
+        elif len(entry) == 1:
+            out.append(entry[0])
+        else:
+            out.append(entry)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def batch_pspec(mesh: Mesh, batch: Optional[int] = None) -> P:
+    """PartitionSpec for a leading-batch tensor under ``mesh``."""
+    return logical_to_pspec(("batch",), mesh, (batch,) if batch else None)
+
+
+def shardings_for_axes(axes_tree_, mesh: Mesh, shapes_tree=None, rules=None):
+    """Tree of logical-axes tuples -> tree of NamedShardings."""
+
+    def one(axes, shape=None):
+        return NamedSharding(mesh, logical_to_pspec(axes, mesh, shape, rules))
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            one, axes_tree_, is_leaf=lambda x: isinstance(x, tuple) and all(
+                a is None or isinstance(a, str) for a in x
+            )
+        )
+    return jax.tree_util.tree_map(
+        lambda a, s: one(a, s.shape if hasattr(s, "shape") else s),
+        axes_tree_,
+        shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+def shardings_for_spec(spec_tree, mesh: Mesh, rules=None):
+    """ParamSpec tree -> NamedSharding tree (shape-aware fallback)."""
+
+    def one(l: ParamSpec):
+        return NamedSharding(mesh, logical_to_pspec(l.axes, mesh, l.shape, rules))
+
+    return jax.tree_util.tree_map(one, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,176 @@
+"""DFPA: the paper's algorithm — convergence proposition, paper-faithfulness
+gates (§3.1), warm starts, and behavioural properties."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnalyticModel,
+    SimulatedExecutor,
+    dfpa,
+    full_model_build_cost,
+    imbalance,
+    make_grid5000_time_fns,
+    make_hcl_time_fns,
+    matmul_app_time_1d,
+    partition_units,
+)
+
+
+def _row_fns(tfns, n):
+    return [(lambda tf: lambda r: tf(r * n))(tf) for tf in tfns]
+
+
+# ---------------------------------------------------------------------------
+# Convergence proposition (paper §2): random shape-valid speed functions
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def _speed_functions(draw):
+    """Speed functions satisfying [16]'s shape restrictions: positive,
+    eventually monotonically decreasing (here: plateau then decay)."""
+    p = draw(st.integers(2, 8))
+    fns = []
+    for _ in range(p):
+        s0 = draw(st.floats(1.0, 100.0))
+        knee = draw(st.floats(10.0, 1e4))
+        decay = draw(st.floats(0.1, 3.0))
+
+        def t(x, s0=s0, knee=knee, decay=decay):
+            if x <= 0:
+                return 0.0
+            s = s0 if x <= knee else s0 / (1.0 + decay * (x - knee) / knee)
+            return x / s
+
+        fns.append(t)
+    return fns
+
+
+@given(fns=_speed_functions(), n=st.integers(100, 20000), eps=st.floats(0.05, 0.3))
+@settings(max_examples=60, deadline=None)
+def test_convergence_proposition(fns, n, eps):
+    """DFPA always terminates and (on deterministic executors) either meets
+    eps or reaches a fixed point whose best round is reported."""
+    ex = SimulatedExecutor(time_fns=fns)
+    res = dfpa(ex, n, eps, min_units=1)
+    assert sum(res.d) == n
+    assert res.iterations <= 100
+    assert res.imbalance == imbalance(res.times) or not res.converged
+    if res.converged:
+        assert res.imbalance <= eps
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithfulness gates on the calibrated HCL simulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [2048, 3072, 4096, 5120, 6144, 7168, 8192])
+def test_hcl_converges_fast(n):
+    """Gate 2: iteration counts small (paper: 2-11); DFPA reaches eps OR the
+    oracle's own integer-granularity floor (eps below the 1-unit resolution
+    is infeasible for ANY partitioner — n=6144 hits this)."""
+    _, tfns = make_hcl_time_fns(n)
+    rows = _row_fns(tfns, n)
+    ex = SimulatedExecutor(time_fns=rows)
+    res = dfpa(ex, n, eps=0.025, min_units=1)
+    oracle = partition_units([AnalyticModel(tf) for tf in rows], n, min_units=1)
+    oracle_imb = imbalance([tf(d) for tf, d in zip(rows, oracle)])
+    assert res.converged or res.imbalance <= oracle_imb * 1.05
+    assert res.iterations <= 45
+    if n <= 4096:
+        assert res.iterations <= 4  # no paging -> almost CPM-fast
+
+
+def test_dfpa_matches_ffmpa_distribution():
+    """Gate 1 (paper §3.1): DFPA returns almost the same distribution as the
+    full-model partitioner (FFMPA)."""
+    n = 5120
+    _, tfns = make_hcl_time_fns(n)
+    rows = _row_fns(tfns, n)
+    ffmpa = partition_units([AnalyticModel(tf) for tf in rows], n, min_units=1)
+    ex = SimulatedExecutor(time_fns=rows)
+    res = dfpa(ex, n, eps=0.025, min_units=1)
+    l1 = sum(abs(a - b) for a, b in zip(res.d, ffmpa))
+    assert l1 / n < 0.05  # distributions within 5% L1
+    # and both balance within eps on the ground truth
+    t_ff = [tf(d) for tf, d in zip(rows, ffmpa)]
+    assert imbalance(t_ff) <= 0.05
+
+
+def test_dfpa_cost_orders_of_magnitude_below_full_model_build():
+    """Gate 3: DFPA cost << full-FPM construction (paper: 29s vs 1850s)."""
+    n = 8192
+    _, tfns = make_hcl_time_fns(n)
+    ex = SimulatedExecutor(time_fns=_row_fns(tfns, n))
+    res = dfpa(ex, n, eps=0.025, min_units=1)
+    dfpa_cost = ex.total_cost
+
+    def fns_for(nn):
+        return make_hcl_time_fns(nn)[1]
+
+    build = full_model_build_cost(
+        fns_for, [1024 * k for k in range(1, 9)], [i / 80 for i in range(1, 21)]
+    )
+    assert build / dfpa_cost > 30  # orders of magnitude in the paper's sense
+    app = matmul_app_time_1d(tfns, res.d, n)
+    assert dfpa_cost / app < 0.15  # contribution <= ~10% (paper gate)
+
+
+def test_grid5000_two_to_three_iterations():
+    """Gate: Table 4 — <= 3 iterations, cost < 1% of the app."""
+    for n in [7168, 10240, 12288]:
+        specs, tfns = make_grid5000_time_fns(n)
+        ex = SimulatedExecutor(time_fns=_row_fns(tfns, n))
+        res = dfpa(ex, n, eps=0.025, min_units=1)
+        assert res.converged and res.iterations <= 3
+        app = matmul_app_time_1d(tfns, res.d, n)
+        assert ex.total_cost / app < 0.01
+
+
+# ---------------------------------------------------------------------------
+# Behavioural properties
+# ---------------------------------------------------------------------------
+
+
+def test_even_distribution_shortcut():
+    """Step 2: homogeneous processors stop after ONE round."""
+    ex = SimulatedExecutor(time_fns=[lambda x: x / 10.0] * 4)
+    res = dfpa(ex, 1000, eps=0.05)
+    assert res.iterations == 1 and res.converged
+
+
+def test_warm_start_reduces_iterations():
+    n = 5120
+    _, tfns = make_hcl_time_fns(n)
+    rows = _row_fns(tfns, n)
+    cold = dfpa(SimulatedExecutor(time_fns=rows), n, eps=0.025, min_units=1)
+    warm = dfpa(
+        SimulatedExecutor(time_fns=rows), n, eps=0.025, min_units=1,
+        warm_models=cold.models,
+    )
+    assert warm.iterations <= max(cold.iterations // 2, 2)
+    assert warm.converged
+
+
+def test_dfpa_with_noise_still_terminates():
+    n = 4096
+    _, tfns = make_hcl_time_fns(n)
+    ex = SimulatedExecutor(
+        time_fns=_row_fns(tfns, n), noise=0.02, rng=np.random.default_rng(7)
+    )
+    res = dfpa(ex, n, eps=0.10, min_units=1, max_iter=40)
+    assert sum(res.d) == n
+    assert res.iterations <= 40
+
+
+def test_input_validation():
+    ex = SimulatedExecutor(time_fns=[lambda x: x] * 4)
+    with pytest.raises(ValueError):
+        dfpa(ex, 2, eps=0.1)  # n < p
+    with pytest.raises(ValueError):
+        dfpa(ex, 100, eps=0.0)

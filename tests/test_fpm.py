@@ -1,0 +1,106 @@
+"""FPM models: the paper's piecewise-linear estimate + its update rules."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, imbalance
+
+
+def test_imbalance_definition():
+    assert imbalance([1.0, 1.0]) == 0.0
+    assert imbalance([1.0, 2.0]) == pytest.approx(1.0)  # (max-min)/min
+    assert imbalance([2.0, 3.0, 4.0]) == pytest.approx(1.0)
+    assert imbalance([0.0, 1.0]) == math.inf
+
+
+def test_update_rules_keep_points_sorted():
+    m = PiecewiseLinearFPM()
+    for x, s in [(10, 5.0), (2, 8.0), (30, 3.0), (5, 6.0)]:
+        m.add_point(x, s)
+    assert m.xs == sorted(m.xs)
+    assert m.num_points == 4
+
+
+def test_duplicate_point_replace_and_mean():
+    m = PiecewiseLinearFPM()
+    m.add_point(4, 2.0)
+    m.add_point(4, 6.0)
+    assert m.ss == [6.0]  # replace (paper: trust the newest observation)
+    m2 = PiecewiseLinearFPM(on_duplicate="mean")
+    m2.add_point(4, 2.0)
+    m2.add_point(4, 6.0)
+    assert m2.ss == [4.0]
+
+
+def test_constant_extension_outside_observed_range():
+    m = PiecewiseLinearFPM.from_points([(10, 5.0), (20, 3.0)])
+    assert m.speed(1) == 5.0  # left extension (paper rule 1)
+    assert m.speed(100) == 3.0  # right continuation (paper rule 2)
+    assert m.speed(15) == pytest.approx(4.0)  # interior interpolation
+
+
+def test_rejects_invalid_points():
+    m = PiecewiseLinearFPM()
+    with pytest.raises(ValueError):
+        m.add_point(-1, 1.0)
+    with pytest.raises(ValueError):
+        m.add_point(1, 0.0)
+
+
+@given(
+    pts=st.lists(
+        st.tuples(
+            st.floats(1.0, 1e6),
+            st.floats(0.01, 1e6),
+        ),
+        min_size=1,
+        max_size=20,
+        unique_by=lambda p: p[0],
+    ),
+    t=st.floats(1e-6, 1e4),
+    cap=st.floats(1.0, 1e7),
+)
+@settings(max_examples=200, deadline=None)
+def test_alloc_at_time_is_sound_and_monotone(pts, t, cap):
+    """alloc_at_time returns a feasible allocation, monotone in t."""
+    m = PiecewiseLinearFPM.from_points(pts)
+    x = m.alloc_at_time(t, cap)
+    assert 0.0 <= x <= cap
+    if x > 1e-9:
+        # feasibility: time(x) <= t (up to float slack)
+        assert m.time(x) <= t * (1 + 1e-9) + 1e-12
+    # monotonicity in t
+    x2 = m.alloc_at_time(2.0 * t, cap)
+    assert x2 >= x - 1e-9
+
+
+@given(
+    pts=st.lists(
+        st.tuples(st.floats(1.0, 1e5), st.floats(0.1, 1e4)),
+        min_size=2,
+        max_size=12,
+        unique_by=lambda p: p[0],
+    ),
+    x=st.floats(0.5, 2e5),
+)
+@settings(max_examples=200, deadline=None)
+def test_speed_positive_and_time_consistent(pts, x):
+    m = PiecewiseLinearFPM.from_points(pts)
+    assert m.speed(x) > 0
+    assert m.time(x) == pytest.approx(x / m.speed(x))
+
+
+def test_analytic_model_bisection():
+    m = AnalyticModel(lambda x: x**1.5 / 10.0)
+    x = m.alloc_at_time(10.0, 1e6)
+    assert m.time(x) == pytest.approx(10.0, rel=1e-6)
+    assert m.alloc_at_time(10.0, 5.0) == 5.0  # cap binds
+
+
+def test_constant_model():
+    c = ConstantModel(4.0)
+    assert c.time(8.0) == 2.0
+    assert c.alloc_at_time(2.0, 100) == 8.0
+    assert c.alloc_at_time(2.0, 5) == 5

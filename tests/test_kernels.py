@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.matmul_update import matmul_update_pallas
+from repro.kernels.rglru import rglru_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_update — the paper's kernel, TPU-native
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-4), (jnp.bfloat16, 5e-2)])
+@pytest.mark.parametrize(
+    "M,N,K,bm,bn,bk",
+    [
+        (128, 128, 128, 128, 128, 128),
+        (256, 512, 384, 128, 256, 128),
+        (512, 256, 1024, 256, 256, 512),
+        (128, 1024, 256, 64, 512, 256),
+    ],
+)
+def test_matmul_update_sweep(M, N, K, bm, bn, bk, dtype, atol):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = _rand(k1, (M, K), dtype)
+    b = _rand(k2, (K, N), dtype)
+    c = _rand(k3, (M, N), dtype)
+    out = matmul_update_pallas(c, a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    want = ref.matmul_update_ref(c, a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=atol * np.sqrt(K), rtol=2e-2,
+    )
+
+
+def test_matmul_update_rejects_indivisible():
+    a = jnp.zeros((100, 128))
+    b = jnp.zeros((128, 128))
+    c = jnp.zeros((100, 128))
+    with pytest.raises(ValueError):
+        matmul_update_pallas(c, a, b, bm=64, bn=64, bk=64, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
+@pytest.mark.parametrize(
+    "B,H,Kv,Sq,Sk,D,kwargs",
+    [
+        (1, 2, 2, 128, 128, 64, dict(causal=True)),
+        (2, 4, 2, 128, 128, 64, dict(causal=True)),  # GQA
+        (2, 4, 1, 128, 128, 32, dict(causal=True)),  # MQA
+        (1, 2, 2, 128, 128, 64, dict(causal=True, window=32)),  # sliding window
+        (1, 2, 2, 128, 128, 64, dict(causal=True, softcap=30.0)),  # gemma softcap
+        (1, 2, 2, 128, 128, 64, dict(causal=False)),  # encoder
+        (1, 2, 2, 64, 256, 64, dict(causal=True)),  # right-aligned queries
+    ],
+)
+def test_flash_attention_sweep(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, H, Sq, D), dtype, 0.3)
+    k = _rand(k2, (B, Kv, Sk, D), dtype, 0.3)
+    v = _rand(k3, (B, Kv, Sk, D), dtype)
+    out = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True, **kwargs)
+    want = ref.flash_attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel agrees with the model's _sdpa oracle (GQA layout adapter)."""
+    from repro.models.attention import _sdpa
+    from repro.models.attention import _causal_mask
+
+    B, S, H, Kv, D = 2, 128, 4, 2, 32
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = _rand(k1, (B, S, H, D), jnp.float32, 0.3)
+    k = _rand(k2, (B, S, Kv, D), jnp.float32, 0.3)
+    v = _rand(k3, (B, S, Kv, D), jnp.float32)
+    want = _sdpa(q, k, v, _causal_mask(S, S, 0), scale=D**-0.5, cap=0.0)
+    got = flash_attention_pallas(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=True, bq=64, bk=64, interpret=True,
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU chunked recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,S,D,bs,bd",
+    [
+        (1, 128, 128, 64, 128),
+        (2, 256, 512, 128, 256),
+        (3, 512, 256, 256, 128),
+    ],
+)
+def test_rglru_scan_sweep(B, S, D, bs, bd):
+    k1, k2 = jax.random.split(KEY)
+    log_a = -jax.nn.softplus(jax.random.normal(k1, (B, S, D)))
+    b = 0.1 * jax.random.normal(k2, (B, S, D))
+    out = rglru_scan_pallas(log_a, b, bs=bs, bd=bd, interpret=True)
+    want = ref.rglru_scan_ref(log_a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_matches_model_block_scan():
+    """Kernel recurrence == the associative-scan used inside the model."""
+    from repro.models.recurrent import _rglru_scan
+
+    B, S, D = 2, 256, 128
+    k1, k2 = jax.random.split(KEY)
+    log_a = -jax.nn.softplus(jax.random.normal(k1, (B, S, D)))
+    b = 0.1 * jax.random.normal(k2, (B, S, D))
+    want = _rglru_scan(log_a, b, None)
+    got = rglru_scan_pallas(log_a, b, bs=128, bd=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_ops_dispatch_to_ref_on_cpu():
+    from repro.kernels import flash_attention, matmul_update, rglru_scan
+
+    a = jnp.ones((8, 8))
+    assert np.allclose(matmul_update(jnp.zeros((8, 8)), a, a), 8.0)
+    q = jnp.ones((1, 1, 8, 4)) * 0.1
+    out = flash_attention(q, q, q, causal=True)
+    assert out.shape == (1, 1, 8, 4)
+    la = jnp.zeros((1, 8, 4)) - 1.0
+    assert rglru_scan(la, jnp.ones((1, 8, 4))).shape == (1, 8, 4)

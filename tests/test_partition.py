@@ -1,0 +1,80 @@
+"""The geometric partitioner of [16]: equal-time optimality + integer laws."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM
+from repro.core.partition import cpm_partition, partition_continuous, partition_units
+
+
+def test_constant_speeds_proportional():
+    assert cpm_partition([1, 2, 3], 600) == [100, 200, 300]
+    assert cpm_partition([1, 1], 5) in ([3, 2], [2, 3])
+
+
+def test_continuous_equal_times():
+    """The paper's geometric condition: x_i / s_i(x_i) all equal at the opt."""
+    models = [
+        AnalyticModel(lambda x: x / 10.0),
+        AnalyticModel(lambda x: x / 20.0 + 1e-4 * x**1.3),
+        AnalyticModel(lambda x: x / 5.0),
+    ]
+    xs, t_star = partition_continuous(models, 1000.0)
+    assert sum(xs) == pytest.approx(1000.0, rel=1e-6)
+    times = [m.time(x) for m, x in zip(models, xs)]
+    for t in times:
+        assert t == pytest.approx(t_star, rel=1e-5)
+
+
+@st.composite
+def _models(draw):
+    p = draw(st.integers(2, 8))
+    out = []
+    for i in range(p):
+        pts = draw(
+            st.lists(
+                st.tuples(st.floats(1.0, 1e4), st.floats(0.5, 500.0)),
+                min_size=1,
+                max_size=6,
+                unique_by=lambda q: q[0],
+            )
+        )
+        out.append(PiecewiseLinearFPM.from_points(pts))
+    return out
+
+
+@given(models=_models(), n=st.integers(10, 5000))
+@settings(max_examples=100, deadline=None)
+def test_integer_partition_laws(models, n):
+    d = partition_units(models, n)
+    assert sum(d) == n
+    assert all(di >= 0 for di in d)
+
+
+@given(models=_models(), n=st.integers(20, 2000))
+@settings(max_examples=50, deadline=None)
+def test_min_units_respected(models, n):
+    d = partition_units(models, n, min_units=2)
+    assert sum(d) == n
+    assert all(di >= 2 for di in d)
+
+
+def test_caps_respected_and_infeasible_raises():
+    models = [ConstantModel(1.0), ConstantModel(1.0)]
+    d = partition_units(models, 10, caps=[3, 10])
+    assert d == [3, 7]
+    with pytest.raises(ValueError):
+        partition_units(models, 10, caps=[3, 3])
+
+
+def test_integer_solution_near_optimal_makespan():
+    """Greedy completion: integer makespan within one unit-time of cont. t*."""
+    models = [ConstantModel(s) for s in [3.0, 7.0, 11.0, 2.0]]
+    n = 997
+    d = partition_units(models, n)
+    makespan = max(m.time(di) for m, di in zip(models, d))
+    _, t_star = partition_continuous(models, float(n))
+    slowest_unit = max(1.0 / s.s for s in models)
+    assert makespan <= t_star + slowest_unit + 1e-9

@@ -1,0 +1,179 @@
+"""Runtime: training loop, online DFPA balance, straggler, elastic."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.fpm import PiecewiseLinearFPM
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.balance import BalanceController
+from repro.runtime.elastic import elastic_rebalance
+from repro.runtime.straggler import StragglerAction, StragglerDetector
+from repro.runtime.train_loop import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Training loop
+# ---------------------------------------------------------------------------
+
+
+def test_loss_decreases():
+    cfg = get_smoke_config("granite-20b")
+    state = init_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, warmup_cosine(5e-3, 2, 50)))
+    toks = jax.random.randint(KEY, (4, 32), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    first = None
+    for i in range(8):
+        state, m = step(state, batch)
+        if first is None:
+            first = float(m["loss"])
+    assert float(m["loss"]) < first * 0.8
+    assert int(state.step) == 8
+
+
+def test_grad_accumulation_equivalence():
+    """A=2 accumulation over two microbatches == one step on the big batch."""
+    cfg = get_smoke_config("stablelm-12b")
+    state = init_train_state(cfg, KEY)
+    toks = jax.random.randint(KEY, (4, 16), 0, cfg.vocab_size)
+    labels = jnp.roll(toks, -1, axis=1)
+    big = {"tokens": toks, "labels": labels}
+    micro = {
+        "tokens": toks.reshape(2, 2, 16),
+        "labels": labels.reshape(2, 2, 16),
+    }
+    sched = warmup_cosine(1e-2, 1, 10)
+    s1, m1 = jax.jit(make_train_step(cfg, sched))(state, big)
+    s2, m2 = jax.jit(make_train_step(cfg, sched, accum_steps=2))(state, micro)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    # Compare ACCUMULATED GRADIENTS (first moment = (1-b1)*g): Adam's update
+    # direction is sign-sensitive for ~zero grads, so post-update params are
+    # not a stable comparison target.  bf16 forward noise differs between the
+    # fused and accumulated paths — assert relative Frobenius agreement.
+    g1 = jax.tree_util.tree_leaves(s1.opt.mu)
+    g2 = jax.tree_util.tree_leaves(s2.opt.mu)
+    for a, b in zip(g1, g2):
+        num = float(jnp.linalg.norm((a - b).ravel()))
+        den = float(jnp.linalg.norm(a.ravel())) + 1e-12
+        assert num / den < 0.02, f"rel frobenius {num/den}"
+
+
+# ---------------------------------------------------------------------------
+# Online DFPA balance controller
+# ---------------------------------------------------------------------------
+
+
+def _simulate(ctrl, speeds, steps=30):
+    """Feed the controller synthetic per-group times t = d / speed."""
+    changes = 0
+    for _ in range(steps):
+        times = [d / s if d > 0 else 0.0 for d, s in zip(ctrl.d, speeds)]
+        changes += bool(ctrl.observe(times))
+    return changes
+
+
+def test_balance_controller_converges_to_speed_ratio():
+    ctrl = BalanceController(n_units=64, num_groups=4, eps=0.08, smooth=1.0)
+    speeds = [1.0, 2.0, 3.0, 2.0]
+    _simulate(ctrl, speeds)
+    want = [64 * s / sum(speeds) for s in speeds]
+    for d, w in zip(ctrl.d, want):
+        assert abs(d - w) <= 2, (ctrl.d, want)
+    times = [d / s for d, s in zip(ctrl.d, speeds)]
+    assert (max(times) - min(times)) / min(times) <= 0.15
+
+
+def test_balance_controller_no_rebalance_when_even():
+    ctrl = BalanceController(n_units=32, num_groups=4, eps=0.1)
+    assert not ctrl.observe([1.0, 1.0, 1.0, 1.0])
+    assert ctrl.rebalances == 0
+
+
+def test_balance_controller_state_roundtrip():
+    ctrl = BalanceController(n_units=32, num_groups=2, eps=0.1, smooth=1.0)
+    ctrl.observe([2.0, 1.0])
+    state = ctrl.state_dict()
+    back = BalanceController.from_state(state, eps=0.1)
+    assert back.d == ctrl.d
+    assert [m.as_points() for m in back.models] == [m.as_points() for m in ctrl.models]
+
+
+def test_balance_adapts_to_speed_change():
+    """A group slowing down mid-run gets units taken away."""
+    ctrl = BalanceController(n_units=60, num_groups=3, eps=0.05, smooth=1.0)
+    _simulate(ctrl, [2.0, 2.0, 2.0], steps=5)
+    d_before = list(ctrl.d)
+    _simulate(ctrl, [2.0, 2.0, 0.5], steps=30)
+    assert ctrl.d[2] < d_before[2]
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detector_escalates():
+    det = StragglerDetector(factor=1.5, patience=2, patience_hard=4)
+    m = PiecewiseLinearFPM.from_points([(10, 10.0)])  # predicts t(10) = 1.0
+    acts = [det.update(0, m, 10, 2.0) for _ in range(4)]
+    assert StragglerAction.REPROFILE in acts
+    assert acts[-1] is StragglerAction.QUARANTINE or StragglerAction.QUARANTINE in acts
+
+
+def test_straggler_healthy_group_resets_strikes():
+    det = StragglerDetector(factor=1.5, patience=2)
+    m = PiecewiseLinearFPM.from_points([(10, 10.0)])
+    det.update(0, m, 10, 2.0)
+    det.update(0, m, 10, 1.0)  # healthy
+    assert det.strikes[0] == 0
+
+
+def test_straggler_reprofile_clears_model():
+    ctrl = BalanceController(n_units=40, num_groups=2, eps=0.05, smooth=1.0)
+    ctrl.observe([2.0, 1.0])
+    ctrl.observe([d / 2.0 for d in ctrl.d])
+    det = StragglerDetector()
+    pts_before = ctrl.models[0].num_points
+    det.reprofile(ctrl, 0)
+    assert ctrl.models[0].num_points <= pts_before
+
+
+# ---------------------------------------------------------------------------
+# Elastic rescale
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_leave_redistributes_all_units():
+    ctrl = BalanceController(n_units=60, num_groups=3, eps=0.05, smooth=1.0)
+    _simulate(ctrl, [1.0, 2.0, 3.0], steps=20)
+    new = elastic_rebalance(ctrl, surviving=[0, 1])
+    assert new.num_groups == 2
+    assert sum(new.d) == 60
+    # warm start: surviving FPM points carried over
+    assert new.models[0].num_points == ctrl.models[0].num_points
+
+
+def test_elastic_join_gets_optimistic_estimate():
+    ctrl = BalanceController(n_units=60, num_groups=2, eps=0.05, smooth=1.0)
+    _simulate(ctrl, [1.0, 3.0], steps=20)
+    new = elastic_rebalance(ctrl, surviving=[0, 1], joined=1)
+    assert new.num_groups == 3
+    assert sum(new.d) == 60
+    assert new.models[2].num_points == 1  # donor point
+    assert new.d[2] > 0  # newcomer not starved
+
+
+def test_elastic_then_converges_quickly():
+    ctrl = BalanceController(n_units=60, num_groups=3, eps=0.08, smooth=1.0)
+    speeds = [1.0, 2.0, 3.0]
+    _simulate(ctrl, speeds, steps=20)
+    new = elastic_rebalance(ctrl, surviving=[0, 2])
+    # group 2 (speed 3.0) survives as index 1
+    changes = _simulate(new, [1.0, 3.0], steps=6)
+    times = [d / s for d, s in zip(new.d, [1.0, 3.0])]
+    assert (max(times) - min(times)) / min(times) <= 0.25

@@ -1,0 +1,265 @@
+"""Substrate: sharding rules, data pipeline, optimizer, compression,
+checkpointing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.configs import get_smoke_config
+from repro.data import SyntheticLMData, UnitBatcher
+from repro.nn.params import ParamSpec, axes_tree, init_tree, param_count
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    compress_bf16,
+    compress_int8_ef,
+    decompress_int8,
+    warmup_cosine,
+)
+from repro.sharding import logical_to_pspec
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (pure functions of mesh metadata — use a tiny local mesh)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single-device "mesh" cannot exercise the rules; fake via axis sizes
+    # by reshaping the one device is impossible -> use mesh of shape (1, 1)
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class _FakeMesh:
+    """Rules only read axis_names and device shape — fake a 16x16 mesh."""
+
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+
+    shape = {"data": 16, "model": 16}
+
+
+def test_rules_basic():
+    m = _FakeMesh()
+    assert logical_to_pspec(("embed", "heads", "head_dim"), m, (64, 32, 16)) == P("data", "model")
+    assert logical_to_pspec(("batch",), m, (256,)) == P("data")
+
+
+def test_rules_conflict_resolution():
+    m = _FakeMesh()
+    # experts take model; mlp can't reuse it
+    ps = logical_to_pspec(("experts", "embed", "mlp"), m, (32, 64, 128))
+    assert ps == P("model", "data")
+
+
+def test_rules_divisibility_fallback():
+    m = _FakeMesh()
+    # kv_heads=1 can't shard 16 ways -> replicated
+    ps = logical_to_pspec(("embed", "kv_heads", "head_dim"), m, (64, 1, 16))
+    assert ps == P("data")
+    # odd dim drops the axis
+    ps = logical_to_pspec(("embed",), m, (65,))
+    assert ps == P()
+
+
+def test_param_spec_validation():
+    with pytest.raises(ValueError):
+        ParamSpec((4, 4), ("embed",))  # rank mismatch
+
+
+def test_init_tree_deterministic():
+    spec = {"a": ParamSpec((4, 8), ("embed", "mlp")), "b": {"c": ParamSpec((8,), ("mlp",), init="ones")}}
+    t1 = init_tree(jax.random.PRNGKey(1), spec)
+    t2 = init_tree(jax.random.PRNGKey(1), spec)
+    for x, y in zip(jax.tree_util.tree_leaves(t1), jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert param_count(spec) == 4 * 8 + 8
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_resumable():
+    cfg = get_smoke_config("granite-20b")
+    d1 = SyntheticLMData(cfg, batch=2, seq=16, seed=3)
+    b0, b1 = d1.next(), d1.next()
+    state = d1.state_dict()
+    b2 = d1.next()
+    d2 = SyntheticLMData(cfg, batch=2, seq=16, seed=3)
+    d2.load_state_dict(state)
+    b2r = d2.next()
+    np.testing.assert_array_equal(b2["tokens"], b2r["tokens"])
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = get_smoke_config("granite-20b")
+    b = SyntheticLMData(cfg, batch=2, seq=16).next()
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+
+
+def test_unit_batcher_split_matches_distribution():
+    cfg = get_smoke_config("granite-20b")
+    data = SyntheticLMData(cfg, batch=2, seq=8)
+    batcher = UnitBatcher(data, micro_batch=2)
+    units = batcher.global_step_units(10, step=0)
+    assert units["tokens"].shape == (10, 2, 8)
+    parts = batcher.split(units, [3, 5, 2])
+    assert [p["tokens"].shape[0] for p in parts] == [3, 5, 2]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), units["tokens"]
+    )
+
+
+def test_unit_batcher_steps_disjoint():
+    cfg = get_smoke_config("granite-20b")
+    data = SyntheticLMData(cfg, batch=2, seq=8)
+    batcher = UnitBatcher(data, micro_batch=2)
+    u0 = batcher.global_step_units(4, step=0)
+    u1 = batcher.global_step_units(4, step=1)
+    assert not np.array_equal(u0["tokens"], u1["tokens"])
+    # step replay is deterministic
+    u0r = batcher.global_step_units(4, step=0)
+    np.testing.assert_array_equal(u0["tokens"], u0r["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# Optimizer + schedules + compression
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params)
+    for i in range(300):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(
+            g, state, params, lr=jnp.float32(0.1), weight_decay=0.0
+        )
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((3,)) * 4.0}  # norm ~ 6.93
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(48.0))
+    total = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    s = warmup_cosine(1.0, 10, 100, floor=0.1)
+    assert float(s(0)) == pytest.approx(0.1)
+    assert float(s(9)) == pytest.approx(1.0)
+    assert float(s(100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(s(55)) < float(s(20))
+
+
+def test_compress_bf16_roundtrip():
+    g = {"w": jnp.array([1.0, 2.5, -3.25])}
+    c = compress_bf16(g)
+    assert c["w"].dtype == jnp.bfloat16
+
+
+@given(
+    vals=st.lists(st.floats(-10, 10, allow_nan=False), min_size=4, max_size=32)
+)
+@settings(max_examples=50, deadline=None)
+def test_int8_error_feedback_unbiased_over_time(vals):
+    """Repeated compression of the same gradient with error feedback: the
+    ACCUMULATED decompressed sum approaches the accumulated true sum."""
+    g = {"w": jnp.array(vals, jnp.float32)}
+    err = {"w": jnp.zeros_like(g["w"])}
+    acc = jnp.zeros_like(g["w"])
+    T = 20
+    for _ in range(T):
+        q, s, err = compress_int8_ef(g, err)
+        acc = acc + decompress_int8(q, s)["w"]
+    scale = float(jnp.max(jnp.abs(g["w"]))) + 1e-6
+    drift = float(jnp.max(jnp.abs(acc / T - g["w"]))) / scale
+    assert drift < 0.02
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+        "step": jnp.array(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        t = _tree()
+        save_checkpoint(d, 7, t)
+        like = jax.tree_util.tree_map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+        back, man = load_checkpoint(d, like)
+        assert man["step"] == 7
+        np.testing.assert_array_equal(np.asarray(back["params"]["w"]), np.asarray(t["params"]["w"]))
+
+
+def test_checkpoint_latest_pointer_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2)
+        for s in [1, 2, 3]:
+            mgr.save_async(s, _tree())
+            mgr.wait()
+        assert mgr.latest_step() == 3
+        steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(steps) == 2  # retention
+
+
+def test_checkpoint_missing_key_fails_loud():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"a": jnp.zeros(3)})
+        like = {"a": jax.ShapeDtypeStruct((3,), jnp.float32), "b": jax.ShapeDtypeStruct((2,), jnp.float32)}
+        with pytest.raises(KeyError):
+            load_checkpoint(d, like)
+
+
+def test_checkpoint_atomic_no_tmp_left():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, _tree())
+        assert not [x for x in os.listdir(d) if x.startswith("tmp.")]
+
+
+def test_checkpoint_dtype_cast_on_restore():
+    """Elastic/precision restore: checkpoint fp32 -> restore as bf16."""
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, {"w": jnp.ones((4,), jnp.float32)})
+        like = {"w": jax.ShapeDtypeStruct((4,), jnp.bfloat16)}
+        back, _ = load_checkpoint(d, like)
+        assert back["w"].dtype == jnp.bfloat16
+
+
+def test_adamw_bf16_moments_still_converges():
+    """bf16 optimizer moments (the 200B+ memory lever) keep convergence."""
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params, moment_dtype=jnp.bfloat16)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(
+            g, state, params, lr=jnp.float32(0.1), weight_decay=0.0
+        )
+    assert state.mu["w"].dtype == jnp.bfloat16
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1

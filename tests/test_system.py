@@ -1,0 +1,147 @@
+"""End-to-end behaviour: the paper's system running as a whole.
+
+1. Heterogeneous multi-group training with online DFPA rebalancing
+   (simulated group speeds, real jit'd steps) — the self-adaptable
+   application of the paper, in miniature.
+2. Serving dispatch balanced by DFPA across heterogeneous replicas.
+3. Checkpoint/restore of model + balance state (self-adaptation survives
+   restarts — including an elastic group change).
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.core import SimulatedExecutor, dfpa, imbalance
+from repro.data import SyntheticLMData, UnitBatcher
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.balance import BalanceController
+from repro.runtime.elastic import elastic_rebalance
+from repro.runtime.serve_loop import ReplicaDispatcher, ServeEngine
+from repro.runtime.train_loop import init_train_state, make_train_step, model_spec_for
+from repro.nn.params import init_tree
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_hetero_training_rebalances_and_learns():
+    """4 heterogeneous groups; DFPA shifts units toward fast groups while
+    the model trains (loss decreases)."""
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    state = init_train_state(cfg, KEY)
+    sched = warmup_cosine(3e-3, 2, 40)
+    n_units, groups = 16, 4
+    hetero = [1.0, 1.0, 2.0, 4.0]  # last group 4x slower
+    data = SyntheticLMData(cfg, batch=2, seq=16)
+    batcher = UnitBatcher(data, micro_batch=2)
+    ctrl = BalanceController(n_units=n_units, num_groups=groups, eps=0.2, smooth=1.0)
+    step_fns = {}
+    losses = []
+    for i in range(10):
+        units = batcher.global_step_units(n_units, i)
+        parts = batcher.split(units, ctrl.d)
+        times = []
+        for g, part in enumerate(parts):
+            a = ctrl.d[g]
+            if a == 0:
+                times.append(0.0)
+                continue
+            if a not in step_fns:
+                step_fns[a] = jax.jit(make_train_step(cfg, sched, accum_steps=a))
+            gb = {k: jnp.asarray(v) for k, v in part.items()}
+            new_state, m = step_fns[a](state, gb)
+            # emulated heterogeneity: deterministic per-unit cost
+            times.append(a * 0.01 * hetero[g])
+            if g == 0:
+                keep_state, loss = new_state, float(m["loss"])
+        state = keep_state
+        losses.append(loss)
+        ctrl.observe(times)
+    # fast groups got more units than the 4x-slow group
+    assert ctrl.d[3] < ctrl.d[0]
+    t_final = [d * 0.01 * h for d, h in zip(ctrl.d, hetero)]
+    assert imbalance(t_final) <= 0.6
+    assert losses[-1] < losses[0]
+
+
+def test_serving_dispatch_balances():
+    rng = np.random.default_rng(1)
+    base = rng.uniform(1e-4, 5e-4, 4)
+
+    def replica_run(i, x):
+        t = x * base[i]
+        if x > 24:
+            t += (x - 24) * base[i] * 5.0  # spill knee
+        return t
+
+    disp = ReplicaDispatcher(replica_run, 4, eps=0.1)
+    res = disp.balance(64)
+    assert sum(res.d) == 64
+    assert res.imbalance <= 0.1 or not res.converged
+    times = [replica_run(i, d) for i, d in enumerate(res.d)]
+    even = max(replica_run(i, 16) for i in range(4))
+    assert max(times) <= even  # never worse than the even split
+
+
+def test_generate_deterministic_greedy():
+    cfg = get_smoke_config("xlstm-350m")
+    params = init_tree(KEY, model_spec_for(cfg))
+    eng = ServeEngine(cfg, params, batch=2, seq_budget=24)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    out1 = eng.generate(toks, 8)
+    out2 = eng.generate(toks, 8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 8)
+
+
+def test_full_state_checkpoint_with_balance_and_elastic_restart():
+    cfg = get_smoke_config("gemma2-2b")
+    state = init_train_state(cfg, KEY)
+    ctrl = BalanceController(n_units=12, num_groups=3, eps=0.1, smooth=1.0)
+    ctrl.observe([1.0, 2.0, 3.0])
+    data = SyntheticLMData(cfg, batch=2, seq=16)
+    data.next()
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(
+            d, 1, {"train": state},
+            extra={"balance": ctrl.state_dict(), "data": data.state_dict()},
+        )
+        like = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), {"train": state}
+        )
+        restored, man = load_checkpoint(d, like)
+        # model state identical
+        for a, b in zip(
+            jax.tree_util.tree_leaves(restored["train"].params),
+            jax.tree_util.tree_leaves(state.params),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # balance state: warm restart + elastic change (drop group 0)
+        ctrl2 = BalanceController.from_state(man["extra"]["balance"], eps=0.1)
+        assert ctrl2.d == ctrl.d
+        ctrl3 = elastic_rebalance(ctrl2, surviving=[1, 2])
+        assert sum(ctrl3.d) == 12
+        # data pipeline resumes at the right index
+        assert man["extra"]["data"]["next_index"] == 1
+
+
+def test_dfpa_paper_narrative_end_to_end():
+    """The quickstart story: unknown 4-processor cluster, balanced in a few
+    rounds at a tiny fraction of the work."""
+    fns = [
+        lambda x: x / 100.0,
+        lambda x: x / 250.0,
+        lambda x: x / 60.0 if x < 500 else x / 60.0 * (1 + (x - 500) / 200.0),
+        lambda x: x / 180.0,
+    ]
+    ex = SimulatedExecutor(time_fns=fns)
+    res = dfpa(ex, 2000, eps=0.1, min_units=1)
+    assert res.converged
+    assert res.imbalance <= 0.1
+    assert res.iterations <= 12
