@@ -1,0 +1,124 @@
+"""Fleet-scale partition latency: seed scalar path vs vectorized ModelBank.
+
+The paper's self-adaptability requirement is that computing an optimal
+distribution costs orders of magnitude less than the application it balances.
+This benchmark measures that cost directly for both partition paths on
+synthetic heterogeneous fleets of p ∈ {10, 100, 1000, 10000} processor
+groups (HCL-like piecewise-linear FPMs, ~6 observed points each):
+
+  * scalar — the seed implementation (``vectorize=False``): every bisection
+    step on ``t*`` is a p-long Python loop over per-model segment scans;
+  * bank   — the ``ModelBank`` path: one numpy pass per bisection step.
+
+Results (latencies, speedup, allocation agreement) are written to
+``BENCH_partition.json``.
+
+    PYTHONPATH=src python benchmarks/partition_scale.py [--quick] [--out FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import ModelBank, PiecewiseLinearFPM, partition_units
+
+
+def make_fleet(p: int, seed: int = 0):
+    """p heterogeneous piecewise-linear FPMs: plateau speed spanning ~3x,
+    cache boost at small x, paging-style decay past a per-proc knee."""
+    rng = np.random.default_rng(seed)
+    plateau = rng.uniform(1.0, 3.0, p) * 1e6
+    knee = rng.uniform(2e3, 2e4, p)
+    models = []
+    for i in range(p):
+        xs = np.geomspace(16.0, 8.0 * knee[i], 6)
+        ss = np.where(
+            xs <= knee[i],
+            plateau[i] * (1.0 + 0.4 * np.exp(-xs / 500.0)),
+            plateau[i] / (1.0 + 2.0 * (xs - knee[i]) / knee[i]),
+        )
+        models.append(PiecewiseLinearFPM.from_points(list(zip(xs, ss))))
+    return models
+
+
+def best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 10**9):
+    rows = []
+    for p in ps:
+        models = make_fleet(p, seed=p)
+        bank = ModelBank.from_models(models)
+        n = units_per_proc * p
+
+        t_bank = best_of(lambda: partition_units(bank, n, min_units=1), repeats)
+        d_bank = partition_units(bank, n, min_units=1)
+
+        row = {"p": p, "n": n, "bank_s": t_bank}
+        if p <= scalar_cutoff:
+            t_scalar = best_of(
+                lambda: partition_units(models, n, min_units=1, vectorize=False), repeats
+            )
+            d_scalar = partition_units(models, n, min_units=1, vectorize=False)
+            row["scalar_s"] = t_scalar
+            row["speedup"] = t_scalar / t_bank
+            row["max_unit_diff"] = int(max(abs(a - b) for a, b in zip(d_scalar, d_bank)))
+        rows.append(row)
+        msg = f"p={p:6d}  bank={t_bank * 1e3:9.3f} ms"
+        if "scalar_s" in row:
+            msg += (
+                f"  scalar={row['scalar_s'] * 1e3:10.3f} ms"
+                f"  speedup={row['speedup']:8.1f}x"
+                f"  max|Δd|={row['max_unit_diff']}"
+            )
+        print(msg, flush=True)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small sweep for CI smoke")
+    ap.add_argument("--out", default="BENCH_partition.json")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        ps, repeats, cutoff = [10, 100], args.repeats or 2, 10**9
+    else:
+        ps, repeats, cutoff = [10, 100, 1000, 10000], args.repeats or 3, 10**9
+
+    rows = run_sweep(ps, repeats, scalar_cutoff=cutoff)
+    payload = {
+        "benchmark": "partition_scale",
+        "description": "partition_units latency, seed scalar path vs ModelBank path",
+        "units_per_proc": 100,
+        "repeats": repeats,
+        "sweep": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"-> {args.out}")
+
+    checked = [r for r in rows if "speedup" in r]
+    big = [r for r in checked if r["p"] >= 1000]
+    if big and min(r["speedup"] for r in big) < 10.0:
+        print("WARNING: <10x speedup at p>=1000")
+        return 1
+    if any(r["max_unit_diff"] > 1 for r in checked):
+        print("WARNING: paths disagree by >1 unit")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,9 +1,47 @@
 """The paper's contribution: FPMs, the geometric partitioner of [16], DFPA,
-the nested 2-D variant, and the calibrated heterogeneous-cluster simulator."""
+the nested 2-D variant, and the calibrated heterogeneous-cluster simulator.
+
+Two model representations back the partitioners:
+
+* **Scalar** (``fpm.py``) — one ``SpeedModel`` object per processor
+  (``PiecewiseLinearFPM``, ``ConstantModel``, ``AnalyticModel``).  This is the
+  protocol every call site programs against.
+* **Batched** (``modelbank.py``) — ``ModelBank`` stores all ``p``
+  piecewise-linear models as padded 2-D arrays and answers the three model
+  queries for the whole fleet in single numpy passes:
+
+  - ``ModelBank.from_models(models)`` / ``from_point_lists(pts)`` — build a
+    bank from scalar models (``TypeError`` for non-piecewise models, which
+    keep the scalar path);
+  - ``bank.speed(x_vec)`` / ``bank.time(x_vec)`` — batched model evaluation,
+    elementwise identical to the scalar models;
+  - ``bank.alloc_at_time(t, caps) -> [p]`` — the partitioner primitive
+    ``max{x <= cap_i : x/s_i(x) <= t}`` for every processor at once (the
+    closed-form per-segment inequality test, vectorized over segments);
+  - ``bank.total_alloc(t, caps)`` — one bisection step of ``t*``;
+  - ``bank.scaled(scale_vec)`` — batched speed rescaling (the 2-D
+    partitioner's column-width reuse);
+  - ``bank.row(i)`` / ``bank.to_models()`` — thin adapters back to the scalar
+    ``SpeedModel`` protocol.
+
+``partition_continuous`` / ``partition_units`` accept either representation
+and auto-vectorize: scalar model sequences are adapted into a bank when
+possible, so DFPA, the 2-D partitioner, and the runtime controllers get the
+fleet-scale path without changing their call sites
+(``benchmarks/partition_scale.py`` measures the gap — orders of magnitude at
+p >= 1000, the paper's self-adaptability requirement).
+"""
 
 from .dfpa import DFPAResult, dfpa
-from .executor import CallableExecutor, Executor, RoundLog, SimulatedExecutor
+from .executor import (
+    BatchedSimulatedExecutor,
+    CallableExecutor,
+    Executor,
+    RoundLog,
+    SimulatedExecutor,
+)
 from .fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, SpeedModel, imbalance
+from .modelbank import ModelBank
 from .partition import cpm_partition, partition_continuous, partition_units
 from .partition2d import (
     Grid2DResult,
@@ -18,22 +56,27 @@ from .simulator import (
     full_model_build_cost,
     make_grid5000_specs,
     make_grid5000_time_fns,
+    make_hcl_time_fn_batch,
     make_hcl_time_fns,
     make_tpu_group_time_fns,
     matmul_app_time_1d,
     speed_fn_1d,
+    speed_fn_1d_batch,
     speed_fn_2d,
     time_fn_1d,
+    time_fn_1d_batch,
 )
 
 __all__ = [
     "AnalyticModel",
+    "BatchedSimulatedExecutor",
     "CallableExecutor",
     "ConstantModel",
     "DFPAResult",
     "Executor",
     "Grid2DResult",
     "HCL_SPECS",
+    "ModelBank",
     "NodeSpec",
     "PiecewiseLinearFPM",
     "RoundLog",
@@ -49,12 +92,15 @@ __all__ = [
     "imbalance",
     "make_grid5000_specs",
     "make_grid5000_time_fns",
+    "make_hcl_time_fn_batch",
     "make_hcl_time_fns",
     "make_tpu_group_time_fns",
     "matmul_app_time_1d",
     "partition_continuous",
     "partition_units",
     "speed_fn_1d",
+    "speed_fn_1d_batch",
     "speed_fn_2d",
     "time_fn_1d",
+    "time_fn_1d_batch",
 ]

@@ -124,7 +124,9 @@ def dfpa(
             return DFPAResult(list(d), list(times), it, True, imb, models, history)
         if it >= max_iter:
             return DFPAResult(best_d, best_t, it, False, best_imb, models, history)
-        # Steps 3+5: models already updated inside measure(); step 4: re-partition.
+        # Steps 3+5: models already updated inside measure(); step 4:
+        # re-partition (partition_units banks the piecewise estimates itself —
+        # one array op per bisection step instead of p Python calls).
         d_new = partition_units(models, n, caps, min_units=min_units)
         if tuple(d_new) in seen:
             t_seen = seen[tuple(d_new)]

@@ -21,7 +21,13 @@ import time as _time
 from dataclasses import dataclass, field
 from typing import Callable, List, Protocol, Sequence
 
-__all__ = ["Executor", "SimulatedExecutor", "CallableExecutor", "RoundLog"]
+__all__ = [
+    "Executor",
+    "SimulatedExecutor",
+    "BatchedSimulatedExecutor",
+    "CallableExecutor",
+    "RoundLog",
+]
 
 
 @dataclass
@@ -74,6 +80,47 @@ class SimulatedExecutor:
                 t *= 1.0 + self.noise * float(self.rng.standard_normal())
                 t = max(t, 1e-12)
             times.append(t)
+        self.logs.append(RoundLog(list(map(int, d)), times, self.round_cost(times)))
+        return times
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times) + self.alpha + self.beta * self.num_procs
+
+    @property
+    def total_cost(self) -> float:
+        return sum(l.wall_cost for l in self.logs)
+
+
+@dataclass
+class BatchedSimulatedExecutor:
+    """Fleet-scale simulator: ONE vector-valued time function for all ``p``
+    processors (e.g. ``simulator.time_fn_1d_batch``), so a round costs one
+    array op instead of ``p`` Python calls.  Mirrors ``SimulatedExecutor``'s
+    collective-overhead and noise model.
+    """
+
+    time_fn_batch: Callable  # x[p] -> t[p], 0 where x <= 0
+    p: int
+    alpha: float = 1e-4
+    beta: float = 1e-6
+    noise: float = 0.0
+    rng: object = None
+    logs: List[RoundLog] = field(default_factory=list)
+
+    @property
+    def num_procs(self) -> int:
+        return self.p
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        import numpy as np
+
+        x = np.asarray(d, dtype=np.float64)
+        t = np.asarray(self.time_fn_batch(x), dtype=np.float64)
+        t = np.where(x > 0, t, 0.0)
+        if self.noise > 0.0 and self.rng is not None:
+            jitter = 1.0 + self.noise * self.rng.standard_normal(self.p)
+            t = np.where(x > 0, np.maximum(t * jitter, 1e-12), 0.0)
+        times = [float(v) for v in t]
         self.logs.append(RoundLog(list(map(int, d)), times, self.round_cost(times)))
         return times
 

@@ -48,13 +48,18 @@ __all__ = [
 def imbalance(times: Sequence[float]) -> float:
     """The paper's balance metric: ``max_{i,j} |t_i - t_j| / t_i``.
 
-    Maximised by ``t_i = min``, ``t_j = max`` so it equals ``(max - min)/min``.
-    Returns ``inf`` when the minimum time is non-positive (degenerate).
+    Maximised by ``t_i = min``, ``t_j = max`` so it equals ``(max - min)/min``
+    over the *working* processors.  Entries ``<= 0`` are processors that
+    received no units this round (legal under ``min_units=0``) — they are
+    ignored, not treated as infinitely imbalanced, so a distribution whose
+    working processors finish simultaneously is balanced no matter how many
+    processors sat out.  Fewer than two positive entries -> 0 (trivially
+    balanced).
     """
-    ts = [float(t) for t in times]
+    ts = [float(t) for t in times if float(t) > 0.0]
+    if len(ts) < 2:
+        return 0.0
     tmin, tmax = min(ts), max(ts)
-    if tmin <= 0.0:
-        return math.inf
     return (tmax - tmin) / tmin
 
 

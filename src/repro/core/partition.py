@@ -17,14 +17,32 @@ Implements the building blocks the paper composes:
 
 * ``cpm_partition`` — the conventional constant-performance-model distribution
   (speed constants, proportional allocation), the paper's baseline.
+
+Two execution paths share identical semantics:
+
+* **bank path** (default) — the models are adapted into a ``ModelBank`` and
+  every bisection step evaluates all ``p`` processors' segment inequalities in
+  ONE numpy pass; the integer completion uses a lazy heap.  This is the
+  fleet-scale path: thousands of processors partition in sub-millisecond time
+  (``benchmarks/partition_scale.py`` measures the gap).
+* **scalar path** — the original per-model Python loop, used automatically
+  when a model has no piecewise representation (``AnalyticModel``) or when
+  ``vectorize=False`` is forced (the scaling benchmark's baseline).
+
+Both functions also accept a ``ModelBank`` directly in place of the model
+sequence.
 """
 
 from __future__ import annotations
 
+import heapq
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from .fpm import ConstantModel, SpeedModel
+from .modelbank import ModelBank
 
 __all__ = [
     "partition_continuous",
@@ -32,18 +50,30 @@ __all__ = [
     "cpm_partition",
 ]
 
+Models = Union[Sequence[SpeedModel], ModelBank]
+
+
+def _as_bank(models: Models) -> Optional[ModelBank]:
+    if isinstance(models, ModelBank):
+        return models
+    try:
+        return ModelBank.from_models(models)
+    except TypeError:
+        return None
+
 
 def _total_alloc(models: Sequence[SpeedModel], t: float, caps: Sequence[float]) -> float:
     return sum(m.alloc_at_time(t, c) for m, c in zip(models, caps))
 
 
 def partition_continuous(
-    models: Sequence[SpeedModel],
+    models: Models,
     n: float,
     caps: Optional[Sequence[float]] = None,
     *,
     rel_tol: float = 1e-12,
     max_steps: int = 200,
+    vectorize: bool = True,
 ) -> Tuple[List[float], float]:
     """Continuous optimal partition of ``n`` units across ``models``.
 
@@ -60,6 +90,25 @@ def partition_continuous(
     if sum(caps) < n:
         raise ValueError(f"infeasible: sum(caps)={sum(caps)} < n={n}")
 
+    bank = _as_bank(models) if vectorize else None
+    if bank is not None:
+        return _partition_continuous_bank(bank, n, caps, rel_tol=rel_tol, max_steps=max_steps)
+    if isinstance(models, ModelBank):
+        models = models.to_models()
+    return _partition_continuous_scalar(models, n, caps, rel_tol=rel_tol, max_steps=max_steps)
+
+
+def _partition_continuous_scalar(
+    models: Sequence[SpeedModel],
+    n: float,
+    caps: List[float],
+    *,
+    rel_tol: float,
+    max_steps: int,
+) -> Tuple[List[float], float]:
+    """The seed per-model Python loop (one ``alloc_at_time`` call per model per
+    bisection step) — kept as the fallback for non-piecewise models and as the
+    benchmark baseline."""
     # Exponential search for an upper bound on t*.
     hi = max(m.time(min(1.0, c)) for m, c in zip(models, caps) if c > 0)
     hi = max(hi, 1e-9)
@@ -91,12 +140,55 @@ def partition_continuous(
     return xs, t_star
 
 
+def _partition_continuous_bank(
+    bank: ModelBank,
+    n: float,
+    caps: List[float],
+    *,
+    rel_tol: float,
+    max_steps: int,
+) -> Tuple[List[float], float]:
+    """Bank path: the same bisection, one array op per step."""
+    caps_arr = np.asarray(caps, dtype=np.float64)
+    active = caps_arr > 0.0
+    if np.any(active & (bank.counts == 0)):
+        raise ValueError("empty FPM")
+    # Exponential search for an upper bound on t*.
+    t_init = bank.time(np.minimum(1.0, caps_arr))
+    hi = float(t_init[active].max(initial=0.0))
+    hi = max(hi, 1e-9)
+    for _ in range(200):
+        if bank.total_alloc(hi, caps_arr) >= n:
+            break
+        hi *= 2.0
+    else:  # pragma: no cover - guarded by the feasibility check above
+        raise RuntimeError("could not bracket t*")
+    lo = 0.0
+    for _ in range(max_steps):
+        mid = 0.5 * (lo + hi)
+        if bank.total_alloc(mid, caps_arr) >= n:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo <= rel_tol * hi:
+            break
+    t_star = hi
+    xs = bank.alloc_at_time(t_star, caps_arr)
+    total = float(xs.sum())
+    if total > 0:
+        excess = total - n
+        if excess > 0:
+            xs = xs - excess * (xs / total)
+    return list(map(float, xs)), t_star
+
+
 def partition_units(
-    models: Sequence[SpeedModel],
+    models: Models,
     n: int,
     caps: Optional[Sequence[int]] = None,
     *,
     min_units: int = 0,
+    vectorize: bool = True,
 ) -> List[int]:
     """Integer partition of ``n`` equal computation units.
 
@@ -110,8 +202,21 @@ def partition_units(
     if min_units * p > n:
         raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
     icaps = [int(c) for c in caps] if caps is not None else [n] * p
+
+    bank = _as_bank(models) if vectorize else None
+    if bank is not None:
+        return _partition_units_bank(bank, n, icaps, min_units=min_units)
+    if isinstance(models, ModelBank):
+        models = models.to_models()
+    return _partition_units_scalar(models, n, icaps, min_units=min_units)
+
+
+def _partition_units_scalar(
+    models: Sequence[SpeedModel], n: int, icaps: List[int], *, min_units: int
+) -> List[int]:
+    p = len(models)
     fcaps = [float(c) for c in icaps]
-    xs, _ = partition_continuous(models, float(n), fcaps)
+    xs, _ = partition_continuous(models, float(n), fcaps, vectorize=False)
     d = [max(min_units, int(math.floor(x))) for x in xs]
     d = [min(di, ci) for di, ci in zip(d, icaps)]
     leftover = n - sum(d)
@@ -142,6 +247,59 @@ def partition_units(
         d[best_i] += 1
     assert sum(d) == n
     return d
+
+
+def _partition_units_bank(
+    bank: ModelBank, n: int, icaps: List[int], *, min_units: int
+) -> List[int]:
+    """Vectorized floor + lazy-heap greedy completion.
+
+    Identical tie-breaking to the scalar loop: each leftover unit goes to the
+    processor with the smallest ``(time(d+1), -frac_remainder, index)``.
+    """
+    p = bank.p
+    caps_arr = np.asarray(icaps, dtype=np.int64)
+    xs_list, _ = partition_continuous(bank, float(n), [float(c) for c in icaps])
+    xs = np.asarray(xs_list, dtype=np.float64)
+    d = np.maximum(min_units, np.floor(xs).astype(np.int64))
+    d = np.minimum(d, caps_arr)
+    leftover = int(n - d.sum())
+
+    if leftover < 0:
+        # Vectorized analogue of the scalar take-back: largest per-unit time
+        # first, round-robin until the overshoot is gone.
+        with np.errstate(invalid="ignore"):
+            per_unit = bank.time(d.astype(np.float64)) / np.maximum(d, 1)
+        order = sorted(range(p), key=lambda i: per_unit[i], reverse=True)
+        k = 0
+        while leftover < 0:
+            i = order[k % p]
+            if d[i] > min_units:
+                d[i] -= 1
+                leftover += 1
+            k += 1
+
+    if leftover > 0:
+        rem = xs - np.floor(xs)
+        # Initial candidate times at d+1 for the whole bank in one pass; each
+        # processor keeps exactly one heap entry, refreshed when it wins a unit.
+        t_next = bank.time((d + 1).astype(np.float64))
+        heap = [
+            (float(t_next[i]), -float(rem[i]), i)
+            for i in range(p)
+            if d[i] + 1 <= caps_arr[i]
+        ]
+        heapq.heapify(heap)
+        while leftover > 0:
+            if not heap:
+                raise ValueError("caps infeasible during integer completion")
+            _, negrem, i = heapq.heappop(heap)
+            d[i] += 1
+            leftover -= 1
+            if d[i] + 1 <= caps_arr[i]:
+                heapq.heappush(heap, (bank.time_one(i, float(d[i] + 1)), negrem, i))
+    assert int(d.sum()) == n
+    return [int(v) for v in d]
 
 
 def cpm_partition(speeds: Sequence[float], n: int, caps: Optional[Sequence[int]] = None) -> List[int]:

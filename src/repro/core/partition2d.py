@@ -25,6 +25,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 from .dfpa import dfpa
 from .executor import SimulatedExecutor
 from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
+from .modelbank import ModelBank
 from .partition import cpm_partition, partition_units
 
 __all__ = [
@@ -61,8 +62,8 @@ def _col_times(
 
 
 def _flat_imbalance(times: List[List[float]]) -> float:
-    flat = [t for col in times for t in col if t > 0]
-    return imbalance(flat) if flat else 0.0
+    # imbalance() ignores zero-allocation entries itself.
+    return imbalance([t for col in times for t in col])
 
 
 def dfpa_partition_2d(
@@ -107,19 +108,16 @@ def dfpa_partition_2d(
                 # partition; no re-benchmark needed.
                 times[j] = _col_times(grid, j, widths, rows[j])
                 continue
-            # Rescale surviving FPM points to the new width (g ~ const in w).
-            warm = []
-            for i in range(p):
-                old_w = fpm_width[i][j]
-                if old_w is None or fpms[i][j].num_points == 0:
-                    warm = None
-                    break
-                scale = old_w / w
-                warm.append(
-                    PiecewiseLinearFPM.from_points(
-                        [(x, s * scale) for x, s in fpms[i][j].as_points()]
-                    )
-                )
+            # Rescale surviving FPM points to the new width (g ~ const in w):
+            # one batched speed-scale over the column's model bank.
+            warm = None
+            if all(
+                fpm_width[i][j] is not None and fpms[i][j].num_points > 0
+                for i in range(p)
+            ):
+                col_bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
+                scale = [fpm_width[i][j] / w for i in range(p)]
+                warm = col_bank.scaled(scale).to_models()
             ex = SimulatedExecutor(
                 time_fns=[
                     (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
@@ -255,7 +253,9 @@ def ffmpa_partition_2d(
     """FFMPA baseline [18]: the FULL models are given (pre-built), so the
     nested iteration runs entirely on the host with zero benchmark cost.
     Rows are partitioned directly in ROW units (one row of width w = one
-    unit), avoiding unit->row rounding distortion."""
+    unit), avoiding unit->row rounding distortion.  The analytic full models
+    have no piecewise representation, so this baseline exercises the scalar
+    partition path (``partition_units`` falls back automatically)."""
     p, q = len(grid), len(grid[0])
     widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
     rows: List[List[int]] = [[M // p] * p for _ in range(q)]

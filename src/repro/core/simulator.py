@@ -34,9 +34,12 @@ __all__ = [
     "NodeSpec",
     "speed_fn_1d",
     "time_fn_1d",
+    "speed_fn_1d_batch",
+    "time_fn_1d_batch",
     "speed_fn_2d",
     "HCL_SPECS",
     "make_hcl_time_fns",
+    "make_hcl_time_fn_batch",
     "make_grid5000_specs",
     "make_grid5000_time_fns",
     "make_tpu_group_time_fns",
@@ -112,6 +115,48 @@ def time_fn_1d(spec: NodeSpec, n: int) -> Callable[[float], float]:
     return lambda x: (x / s(x)) if x > 0 else 0.0
 
 
+def speed_fn_1d_batch(specs: Sequence[NodeSpec], n: int) -> Callable[["object"], "object"]:
+    """Batched ground truth: one vector call evaluates ``s_i(x_i)`` for the
+    WHOLE fleet — the simulator-side analogue of ``ModelBank`` (needed so the
+    scaling benchmark and the batched executor are not bottlenecked on ``p``
+    Python calls per round).  Elementwise identical to ``speed_fn_1d``.
+    """
+    import numpy as np
+
+    s_mem = np.array([s.s_mem for s in specs])
+    boost0 = np.array([s.cache_boost for s in specs])
+    disk = np.array([s.disk_factor for s in specs])
+    x_cache = np.maximum(np.array([s.l2_bytes for s in specs]) / 16.0, 1.0)
+    avail = np.array([s.ram_bytes - s.os_bytes for s in specs]) - 8.0 * n * n
+    x_page = np.maximum(avail / 16.0, 1.0)
+    x_ref = np.array([s.ram_bytes for s in specs]) / 16.0
+
+    def s(x):
+        x = np.asarray(x, dtype=np.float64)
+        w = np.clip((x - x_cache) / (2.0 * x_cache), 0.0, 1.0)
+        boost = boost0 + w * (1.0 - boost0)
+        boost = np.where(x <= 0, boost0, boost)
+        base = s_mem * boost
+        z = np.maximum(x - x_page, 0.0) / x_ref
+        miss = z / (1.0 + z)
+        return base / (1.0 + (disk - 1.0) * miss)
+
+    return s
+
+
+def time_fn_1d_batch(specs: Sequence[NodeSpec], n: int) -> Callable[["object"], "object"]:
+    """Batched ``t_i(x_i) = x_i / s_i(x_i)`` (0 where ``x_i <= 0``)."""
+    import numpy as np
+
+    s = speed_fn_1d_batch(specs, n)
+
+    def t(x):
+        x = np.asarray(x, dtype=np.float64)
+        return np.where(x > 0, x / s(x), 0.0)
+
+    return t
+
+
 def speed_fn_2d(spec: NodeSpec, b: int = 32) -> Callable[[float, float], float]:
     """2-D kernel speed g(m_b, n_b) [units/s], unit = b x b block mult-add.
 
@@ -180,6 +225,15 @@ def make_hcl_time_fns(
     """The paper's experimental setup: 15 HCL nodes (hcl07 excluded)."""
     specs = [s for s in HCL_SPECS if s.name not in set(exclude)]
     return specs, [time_fn_1d(s, n) for s in specs]
+
+
+def make_hcl_time_fn_batch(
+    n: int, exclude: Sequence[str] = ("hcl07",)
+) -> Tuple[List[NodeSpec], Callable[["object"], "object"]]:
+    """Batched counterpart of :func:`make_hcl_time_fns`: one vector-valued
+    time function for the whole cluster."""
+    specs = [s for s in HCL_SPECS if s.name not in set(exclude)]
+    return specs, time_fn_1d_batch(specs, n)
 
 
 def make_grid5000_specs(seed: int = 5000) -> List[NodeSpec]:

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from ..core.fpm import PiecewiseLinearFPM, imbalance
+from ..core.modelbank import ModelBank
 from ..core.partition import partition_units
 
 __all__ = ["BalanceController", "GroupTimer"]
@@ -83,7 +84,7 @@ class BalanceController:
             ema = ti if ema is None else (1 - self.smooth) * ema + self.smooth * ti
             self._ema[key] = ema
             self.models[i].add_point(float(di), di / ema)
-        if imbalance([t for t in times if t > 0]) <= self.eps:
+        if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
             return False
         new_d = partition_units(
             self.models, self.n_units, self.caps, min_units=self.min_units
@@ -94,10 +95,19 @@ class BalanceController:
         self.rebalances += 1
         return True
 
+    def bank(self) -> ModelBank:
+        """Batched snapshot of the current per-group FPM estimates.
+
+        Rebuilt on demand (the estimates mutate every observed step);
+        fleet-wide consumers — e.g. ``StragglerDetector.update_batch`` —
+        use this instead of looping over the scalar models.
+        """
+        return ModelBank.from_models(self.models)
+
     @property
     def imbalance_estimate(self) -> float:
         ts = [m.time(di) for m, di in zip(self.models, self.d) if di > 0 and m.num_points]
-        return imbalance(ts) if len(ts) >= 2 else 0.0
+        return imbalance(ts)
 
     # -- persistence (self-adaptability across restarts) ----------------------
 

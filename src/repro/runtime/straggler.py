@@ -18,9 +18,12 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from ..core.fpm import PiecewiseLinearFPM
+from ..core.modelbank import ModelBank
 
 __all__ = ["StragglerAction", "StragglerDetector"]
 
@@ -55,6 +58,36 @@ class StragglerDetector:
             return StragglerAction.NONE
         ratio = observed_t / predicted
         self.history.append((group, d_units, predicted, observed_t, ratio))
+        return self._strike(group, ratio)
+
+    def update_batch(
+        self,
+        bank: ModelBank,
+        d_units: Sequence[int],
+        observed: Sequence[float],
+    ) -> List[StragglerAction]:
+        """Fleet-wide strike update: ONE batched ``bank.time`` pass predicts
+        every group's healthy step time, then the scalar strike automaton runs
+        only on the few groups whose prediction is usable.
+
+        ``bank`` is the controller's model-bank snapshot
+        (``BalanceController.bank()``); returns one action per group.
+        Equivalent to calling :meth:`update` per group, without the ``p``
+        scalar ``time`` evaluations.
+        """
+        d = np.asarray(d_units, dtype=np.float64)
+        obs = np.asarray(observed, dtype=np.float64)
+        predicted = bank.time(d)
+        usable = (bank.counts > 0) & (d > 0) & (obs > 0) & (predicted > 0)
+        actions = [StragglerAction.NONE] * bank.p
+        for g in np.nonzero(usable)[0]:
+            g = int(g)
+            ratio = float(obs[g] / predicted[g])
+            self.history.append((g, int(d[g]), float(predicted[g]), float(obs[g]), ratio))
+            actions[g] = self._strike(g, ratio)
+        return actions
+
+    def _strike(self, group: int, ratio: float) -> StragglerAction:
         if ratio < self.factor:
             self.strikes[group] = 0
             return StragglerAction.NONE

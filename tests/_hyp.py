@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When it
+is absent, property-based tests are SKIPPED instead of killing collection for
+the whole module — the deterministic tests in the same files still run.
+
+Usage in test modules::
+
+    from _hyp import given, settings, st   # instead of `from hypothesis import ...`
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Anything:
+        """Stands in for `strategies`: any attribute/call yields another stub,
+        so module-level strategy construction (`st.composite`, `st.floats(...)`)
+        parses; the `given` stub then skips the test before anything runs."""
+
+        def __call__(self, *args, **kwargs):
+            return _Anything()
+
+        def __getattr__(self, name):
+            return _Anything()
+
+    st = _Anything()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)

@@ -3,7 +3,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, imbalance
 
@@ -12,7 +12,17 @@ def test_imbalance_definition():
     assert imbalance([1.0, 1.0]) == 0.0
     assert imbalance([1.0, 2.0]) == pytest.approx(1.0)  # (max-min)/min
     assert imbalance([2.0, 3.0, 4.0]) == pytest.approx(1.0)
-    assert imbalance([0.0, 1.0]) == math.inf
+
+
+def test_imbalance_ignores_zero_allocation_entries():
+    """Regression: a processor with 0 units has t=0; that is a legal outcome
+    under min_units=0, not infinite imbalance — DFPA must be able to converge
+    when all *working* processors finish simultaneously."""
+    assert imbalance([0.0, 1.0]) == 0.0  # one working proc -> balanced
+    assert imbalance([0.0, 2.0, 2.0]) == 0.0
+    assert imbalance([0.0, 1.0, 2.0]) == pytest.approx(1.0)
+    assert imbalance([0.0, 0.0]) == 0.0  # degenerate: nobody worked
+    assert imbalance([]) == 0.0
 
 
 def test_update_rules_keep_points_sorted():

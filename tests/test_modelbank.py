@@ -1,0 +1,274 @@
+"""ModelBank: batched FPM evaluation + the vectorized partition path.
+
+Fuzz/property coverage is numpy-randomized (not hypothesis-based) so it runs
+in minimal environments:
+
+  * the scalar closed-form ``PiecewiseLinearFPM.alloc_at_time`` agrees with
+    ``AnalyticModel`` bisection on randomized (monotone-time) piecewise models;
+  * batched ``ModelBank`` queries match the scalar models elementwise on
+    arbitrary (including non-monotone) piecewise models;
+  * the vectorized partition path matches the seed scalar path to ±1 unit per
+    processor, including on the calibrated HCL simulator fixtures.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticModel,
+    BatchedSimulatedExecutor,
+    ConstantModel,
+    ModelBank,
+    PiecewiseLinearFPM,
+    SimulatedExecutor,
+    dfpa,
+    make_hcl_time_fn_batch,
+    make_hcl_time_fns,
+    partition_units,
+    speed_fn_1d,
+    speed_fn_1d_batch,
+)
+from repro.runtime.balance import BalanceController
+from repro.runtime.straggler import StragglerDetector
+
+
+def _random_fpm(rng, k_max=8, monotone=False):
+    k = int(rng.integers(1, k_max))
+    xs = np.unique(rng.uniform(1.0, 1e4, k))
+    ss = rng.uniform(0.5, 500.0, len(xs))
+    if monotone:  # non-increasing speed -> strictly increasing time
+        ss = np.sort(ss)[::-1]
+    return PiecewiseLinearFPM.from_points(list(zip(xs, ss)))
+
+
+def _random_bank(rng, p, **kw):
+    models = [_random_fpm(rng, **kw) for _ in range(p)]
+    return models, ModelBank.from_models(models)
+
+
+# ---------------------------------------------------------------------------
+# Scalar closed form vs analytic bisection
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_at_time_closed_form_matches_bisection():
+    """On monotone-time models (AnalyticModel's contract) the closed-form
+    segment solver and 96-step bisection find the same allocation."""
+    rng = np.random.default_rng(42)
+    for _ in range(200):
+        m = _random_fpm(rng, monotone=True)
+        ref = AnalyticModel(m.time)
+        t = float(rng.uniform(1e-3, 50.0))
+        cap = float(rng.uniform(1.0, 2e4))
+        a = m.alloc_at_time(t, cap)
+        b = ref.alloc_at_time(t, cap)
+        assert a == pytest.approx(b, rel=1e-9, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Batched bank vs scalar models, elementwise
+# ---------------------------------------------------------------------------
+
+
+def test_bank_matches_scalar_models_elementwise():
+    rng = np.random.default_rng(7)
+    for _ in range(100):
+        p = int(rng.integers(1, 12))
+        models, bank = _random_bank(rng, p)
+        x = rng.uniform(0.1, 2e4, p)
+        assert np.allclose(bank.speed(x), [m.speed(v) for m, v in zip(models, x)], rtol=1e-12)
+        assert np.allclose(bank.time(x), [m.time(v) for m, v in zip(models, x)], rtol=1e-12)
+        t = float(rng.uniform(1e-3, 100.0))
+        caps = rng.uniform(0.5, 1e4, p)
+        want = [m.alloc_at_time(t, c) for m, c in zip(models, caps)]
+        assert np.allclose(bank.alloc_at_time(t, caps), want, rtol=1e-10, atol=1e-10)
+
+
+def test_bank_scalar_broadcast_and_edge_inputs():
+    rng = np.random.default_rng(3)
+    models, bank = _random_bank(rng, 5)
+    # scalar x broadcasts across the bank
+    assert np.allclose(bank.speed(100.0), [m.speed(100.0) for m in models])
+    # non-positive t / caps -> zero allocation
+    assert np.all(bank.alloc_at_time(0.0, np.full(5, 10.0)) == 0.0)
+    assert np.all(bank.alloc_at_time(1.0, np.zeros(5)) == 0.0)
+    # time at x=0 is 0
+    assert np.all(bank.time(0.0) == 0.0)
+
+
+def test_bank_constant_model_adapter():
+    models = [ConstantModel(3.0), ConstantModel(7.5)]
+    bank = ModelBank.from_models(models)
+    for t in (0.1, 1.0, 13.0):
+        for cap in (0.5, 4.0, 1e3):
+            want = [m.alloc_at_time(t, cap) for m in models]
+            assert np.allclose(bank.alloc_at_time(t, np.full(2, cap)), want)
+    assert np.allclose(bank.speed(50.0), [3.0, 7.5])
+
+
+def test_bank_rejects_analytic_models():
+    with pytest.raises(TypeError):
+        ModelBank.from_models([AnalyticModel(lambda x: x)])
+
+
+def test_bank_round_trip_and_scaled():
+    rng = np.random.default_rng(11)
+    models, bank = _random_bank(rng, 4)
+    back = bank.to_models()
+    for m, b in zip(models, back):
+        assert m.as_points() == pytest.approx(b.as_points())
+    scale = np.array([0.5, 1.0, 2.0, 3.0])
+    scaled = bank.scaled(scale)
+    x = rng.uniform(1.0, 1e4, 4)
+    assert np.allclose(scaled.speed(x), bank.speed(x) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized partition path vs seed scalar path
+# ---------------------------------------------------------------------------
+
+
+def test_partition_bank_matches_scalar_randomized():
+    rng = np.random.default_rng(123)
+    for _ in range(80):
+        p = int(rng.integers(2, 10))
+        models, bank = _random_bank(rng, p)
+        n = int(rng.integers(10, 5000))
+        d_scalar = partition_units(models, n, vectorize=False)
+        d_bank = partition_units(bank, n)
+        assert sum(d_bank) == n
+        assert max(abs(a - b) for a, b in zip(d_scalar, d_bank)) <= 1
+
+
+def test_partition_bank_matches_scalar_with_caps_and_min_units():
+    rng = np.random.default_rng(5)
+    for _ in range(40):
+        p = int(rng.integers(2, 8))
+        models, bank = _random_bank(rng, p)
+        n = int(rng.integers(4 * p, 500))
+        caps = [int(c) for c in rng.integers(n // p, n + 1, p)]
+        if sum(caps) < n:
+            continue
+        d_scalar = partition_units(models, n, caps, min_units=2, vectorize=False)
+        d_bank = partition_units(bank, n, caps, min_units=2)
+        assert sum(d_bank) == n
+        assert all(2 <= di <= ci for di, ci in zip(d_bank, caps))
+        assert max(abs(a - b) for a, b in zip(d_scalar, d_bank)) <= 1
+
+
+def test_partition_bank_matches_scalar_on_hcl_fixtures():
+    """Acceptance gate: identical (±1 unit/processor) allocations on FPMs
+    sampled from the calibrated HCL simulator."""
+    for n in (2048, 5120, 8192):
+        specs, _ = make_hcl_time_fns(n)
+        models = []
+        for s in specs:
+            sp = speed_fn_1d(s, n)
+            xs = np.geomspace(64, 4 * n, 9)
+            models.append(PiecewiseLinearFPM.from_points([(x, sp(x)) for x in xs]))
+        bank = ModelBank.from_models(models)
+        d_scalar = partition_units(models, n, min_units=1, vectorize=False)
+        d_bank = partition_units(bank, n, min_units=1)
+        assert sum(d_bank) == n
+        assert max(abs(a - b) for a, b in zip(d_scalar, d_bank)) <= 1
+
+
+def test_dfpa_identical_through_bank_path():
+    """DFPA (which now re-partitions through the bank) reproduces the same
+    distribution as forcing every re-partition through the scalar path."""
+    n = 5120
+    _, tfns = make_hcl_time_fns(n)
+    rows = [(lambda tf: lambda r: tf(r * n))(tf) for tf in tfns]
+    res = dfpa(SimulatedExecutor(time_fns=rows), n, eps=0.025, min_units=1)
+    # replay the final models through both partition paths
+    d_bank = partition_units(ModelBank.from_models(res.models), n, min_units=1)
+    d_scalar = partition_units(res.models, n, min_units=1, vectorize=False)
+    assert max(abs(a - b) for a, b in zip(d_bank, d_scalar)) <= 1
+
+
+# ---------------------------------------------------------------------------
+# Zero-allocation convergence (imbalance bugfix, DFPA level)
+# ---------------------------------------------------------------------------
+
+
+def test_dfpa_converges_with_zero_allocation_processor():
+    """Regression: with min_units=0 the optimal partition may give a very
+    slow processor 0 units; imbalance must ignore it so DFPA can converge."""
+    ex = SimulatedExecutor(time_fns=[lambda x: x / 100.0, lambda x: x * 1000.0])
+    res = dfpa(ex, 10, eps=0.5, min_units=0)
+    assert res.converged
+    assert res.d == [10, 0]
+    assert res.imbalance == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Batched simulator + executor
+# ---------------------------------------------------------------------------
+
+
+def test_batched_sim_fns_match_scalar():
+    n = 5120
+    specs, tfns = make_hcl_time_fns(n)
+    _, tb = make_hcl_time_fn_batch(n)
+    sb = speed_fn_1d_batch(specs, n)
+    for x in np.geomspace(1.0, 5e6, 25):
+        xv = np.full(len(specs), x)
+        assert np.allclose(tb(xv), [tf(float(x)) for tf in tfns], rtol=1e-12)
+        assert np.allclose(
+            sb(xv), [speed_fn_1d(s, n)(float(x)) for s in specs], rtol=1e-12
+        )
+    assert np.all(tb(np.zeros(len(specs))) == 0.0)
+
+
+def test_batched_executor_matches_scalar_executor():
+    n = 4096
+    _, tfns = make_hcl_time_fns(n)
+    _, tb = make_hcl_time_fn_batch(n)
+    rows = [(lambda tf: lambda r: tf(r * n))(tf) for tf in tfns]
+    r1 = dfpa(SimulatedExecutor(time_fns=rows), n, eps=0.025, min_units=1)
+    r2 = dfpa(
+        BatchedSimulatedExecutor(
+            time_fn_batch=lambda r: tb(np.asarray(r, float) * n), p=len(tfns)
+        ),
+        n,
+        eps=0.025,
+        min_units=1,
+    )
+    assert r1.d == r2.d
+    assert r1.iterations == r2.iterations
+
+
+# ---------------------------------------------------------------------------
+# Runtime controllers on the bank
+# ---------------------------------------------------------------------------
+
+
+def test_balance_controller_bank_snapshot_and_rebalance():
+    ctl = BalanceController(n_units=64, num_groups=4, eps=0.05)
+    # group 3 is half as fast as the rest
+    speeds = [4.0, 4.0, 4.0, 2.0]
+    for _ in range(6):
+        times = [d / s for d, s in zip(ctl.d, speeds)]
+        ctl.observe(times)
+    bank = ctl.bank()
+    assert bank.p == 4
+    times = [d / s for d, s in zip(ctl.d, speeds)]
+    assert ctl.rebalances >= 1
+    # converged: slow group got ~half the units of the fast ones
+    assert ctl.d[3] < ctl.d[0]
+    assert ctl.imbalance_estimate <= 0.3
+
+
+def test_straggler_update_batch_matches_scalar():
+    rng = np.random.default_rng(17)
+    p = 6
+    models = [PiecewiseLinearFPM.from_points([(10.0, 5.0), (50.0, 4.0)]) for _ in range(p)]
+    bank = ModelBank.from_models(models)
+    d = [20] * p
+    det_a, det_b = StragglerDetector(), StragglerDetector()
+    for step in range(8):
+        obs = [models[i].time(d[i]) * (3.5 if (i == 2 and step >= 2) else 1.0) for i in range(p)]
+        batch = det_a.update_batch(bank, d, obs)
+        scalar = [det_b.update(i, models[i], d[i], obs[i]) for i in range(p)]
+        assert batch == scalar
+    assert det_a.history == det_b.history
