@@ -1,19 +1,29 @@
-"""Fleet-scale partition latency: seed scalar path vs vectorized ModelBank.
+"""Fleet-scale partition latency: scalar vs numpy ModelBank vs jitted jax bank.
 
 The paper's self-adaptability requirement is that computing an optimal
 distribution costs orders of magnitude less than the application it balances.
-This benchmark measures that cost directly for both partition paths on
+This benchmark measures that cost directly for all three partition paths on
 synthetic heterogeneous fleets of p ∈ {10, 100, 1000, 10000} processor
 groups (HCL-like piecewise-linear FPMs, ~6 observed points each):
 
   * scalar — the seed implementation (``vectorize=False``): every bisection
     step on ``t*`` is a p-long Python loop over per-model segment scans;
-  * bank   — the ``ModelBank`` path: one numpy pass per bisection step.
+  * bank   — the ``ModelBank`` path: one numpy pass per bisection step;
+  * jax    — the ``JaxModelBank`` path: the whole t* search + integer
+    completion under ``jax.jit``.  Two numbers matter: the one-time compile
+    cost, and the steady-state repartition latency afterwards — the
+    compile-once/repartition-many number the paper's self-adaptability
+    argument actually depends on (repartitioning happens every imbalance
+    event; compilation happens once per fleet shape).
 
-Results (latencies, speedup, allocation agreement) are written to
-``BENCH_partition.json``.
+The jax sweep runs with x64 enabled and asserts its allocations are
+BIT-IDENTICAL to the numpy bank at every swept p (exit code 1 otherwise —
+CI runs the quick sweep, so parity is enforced on every PR).
 
-    PYTHONPATH=src python benchmarks/partition_scale.py [--quick] [--out FILE]
+Results are written to ``BENCH_partition.json``.
+
+    PYTHONPATH=src python benchmarks/partition_scale.py \
+        [--quick] [--backend numpy|jax|both] [--out FILE]
 """
 
 from __future__ import annotations
@@ -54,7 +64,15 @@ def best_of(fn, repeats: int) -> float:
     return best
 
 
-def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 10**9):
+def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
+              scalar_cutoff: int = 10**9):
+    if backend in ("jax", "both"):
+        import jax
+
+        # Bit-identical-to-numpy is the acceptance gate; that needs doubles.
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import JaxModelBank
+
     rows = []
     for p in ps:
         models = make_fleet(p, seed=p)
@@ -65,7 +83,7 @@ def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 
         d_bank = partition_units(bank, n, min_units=1)
 
         row = {"p": p, "n": n, "bank_s": t_bank}
-        if p <= scalar_cutoff:
+        if backend in ("numpy", "both") and p <= scalar_cutoff:
             t_scalar = best_of(
                 lambda: partition_units(models, n, min_units=1, vectorize=False), repeats
             )
@@ -73,6 +91,22 @@ def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 
             row["scalar_s"] = t_scalar
             row["speedup"] = t_scalar / t_bank
             row["max_unit_diff"] = int(max(abs(a - b) for a, b in zip(d_scalar, d_bank)))
+        if backend in ("jax", "both"):
+            jbank = JaxModelBank.from_bank(bank)
+
+            def jax_partition():
+                return partition_units(jbank, n, min_units=1, backend="jax")
+
+            t0 = time.perf_counter()
+            d_jax = jax_partition()  # traces + compiles for this fleet shape
+            t_compile = time.perf_counter() - t0
+            t_jax = best_of(jax_partition, max(repeats, 2))  # post-compile
+            row["jax_compile_s"] = t_compile
+            row["jax_steady_s"] = t_jax
+            row["jax_vs_bank_speedup"] = t_bank / t_jax
+            row["jax_max_unit_diff"] = int(
+                max(abs(a - b) for a, b in zip(d_jax, d_bank))
+            )
         rows.append(row)
         msg = f"p={p:6d}  bank={t_bank * 1e3:9.3f} ms"
         if "scalar_s" in row:
@@ -81,6 +115,12 @@ def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 
                 f"  speedup={row['speedup']:8.1f}x"
                 f"  max|Δd|={row['max_unit_diff']}"
             )
+        if "jax_steady_s" in row:
+            msg += (
+                f"  jax={row['jax_steady_s'] * 1e3:9.3f} ms"
+                f" (compile {row['jax_compile_s']:6.2f} s)"
+                f"  jax_max|Δd|={row['jax_max_unit_diff']}"
+            )
         print(msg, flush=True)
     return rows
 
@@ -88,6 +128,7 @@ def run_sweep(ps, repeats: int, units_per_proc: int = 100, scalar_cutoff: int = 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small sweep for CI smoke")
+    ap.add_argument("--backend", choices=["numpy", "jax", "both"], default="both")
     ap.add_argument("--out", default="BENCH_partition.json")
     ap.add_argument("--repeats", type=int, default=None)
     args = ap.parse_args(argv)
@@ -97,27 +138,59 @@ def main(argv=None) -> int:
     else:
         ps, repeats, cutoff = [10, 100, 1000, 10000], args.repeats or 3, 10**9
 
-    rows = run_sweep(ps, repeats, scalar_cutoff=cutoff)
+    rows = run_sweep(ps, repeats, args.backend, scalar_cutoff=cutoff)
     payload = {
         "benchmark": "partition_scale",
-        "description": "partition_units latency, seed scalar path vs ModelBank path",
+        "description": (
+            "partition_units latency: seed scalar path vs numpy ModelBank "
+            "vs jitted JaxModelBank (x64; steady-state = post-compile)"
+        ),
         "units_per_proc": 100,
         "repeats": repeats,
+        "backend": args.backend,
         "sweep": rows,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"-> {args.out}")
 
+    rc = 0
     checked = [r for r in rows if "speedup" in r]
     big = [r for r in checked if r["p"] >= 1000]
     if big and min(r["speedup"] for r in big) < 10.0:
         print("WARNING: <10x speedup at p>=1000")
-        return 1
+        rc = 1
     if any(r["max_unit_diff"] > 1 for r in checked):
-        print("WARNING: paths disagree by >1 unit")
-        return 1
-    return 0
+        print("WARNING: scalar/bank paths disagree by >1 unit")
+        rc = 1
+    jaxed = [r for r in rows if "jax_max_unit_diff" in r]
+    if jaxed:
+        import jax
+
+        if jax.default_backend() == "cpu":
+            # Bit-identity is a CPU contract (same FPU, same reduction
+            # order); on accelerators a 1-ulp sum difference may move one
+            # boundary unit, so there only >1-unit drift is a failure.
+            if any(r["jax_max_unit_diff"] != 0 for r in jaxed):
+                print("FAIL: jax allocations not bit-identical to the numpy bank")
+                rc = 1
+        elif any(r["jax_max_unit_diff"] > 1 for r in jaxed):
+            print("FAIL: jax allocations differ from the numpy bank by >1 unit")
+            rc = 1
+    # Hard gate at the paper-scale fleet (p=1000): steady-state jitted
+    # repartition must not lose to the numpy bank.  Larger p is reported but
+    # informational — at p=10^4 the sequential completion loop's per-
+    # iteration overhead on CPU XLA still roughly ties the numpy heap
+    # (ROADMAP: threshold-count batched completion).
+    slow = [r for r in jaxed if r["p"] == 1000 and r["jax_steady_s"] > r["bank_s"]]
+    if slow:
+        print("FAIL: jax steady-state slower than numpy bank at p=1000")
+        rc = 1
+    for r in jaxed:
+        if r["p"] > 1000 and r["jax_steady_s"] > r["bank_s"]:
+            print(f"note: jax steady-state behind numpy bank at p={r['p']} "
+                  f"({r['jax_steady_s']*1e3:.0f} ms vs {r['bank_s']*1e3:.0f} ms)")
+    return rc
 
 
 if __name__ == "__main__":

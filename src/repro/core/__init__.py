@@ -30,6 +30,11 @@ possible, so DFPA, the 2-D partitioner, and the runtime controllers get the
 fleet-scale path without changing their call sites
 (``benchmarks/partition_scale.py`` measures the gap — orders of magnitude at
 p >= 1000, the paper's self-adaptability requirement).
+
+A third, on-device representation — ``JaxModelBank`` (``modelbank_jax.py``,
+selected with ``backend="jax"``) — runs the whole ``t*`` bisection and the
+greedy integer completion under ``jax.jit``; it is exported lazily so the
+numpy paths never import jax.
 """
 
 from .dfpa import DFPAResult, dfpa
@@ -46,6 +51,7 @@ from .partition import cpm_partition, partition_continuous, partition_units
 from .partition2d import (
     Grid2DResult,
     app_time_2d,
+    bank_repartition_2d,
     cpm_partition_2d,
     dfpa_partition_2d,
     ffmpa_partition_2d,
@@ -63,9 +69,22 @@ from .simulator import (
     speed_fn_1d,
     speed_fn_1d_batch,
     speed_fn_2d,
+    speed_fn_2d_batch,
     time_fn_1d,
     time_fn_1d_batch,
+    time_fn_2d_batch,
 )
+
+
+def __getattr__(name):
+    # Lazy: importing the jax bank pulls in jax; numpy-only consumers (the
+    # scalar/bank paths, the scaling benchmark's baseline) shouldn't pay.
+    if name == "JaxModelBank":
+        from .modelbank_jax import JaxModelBank
+
+        return JaxModelBank
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 __all__ = [
     "AnalyticModel",
@@ -76,6 +95,7 @@ __all__ = [
     "Executor",
     "Grid2DResult",
     "HCL_SPECS",
+    "JaxModelBank",
     "ModelBank",
     "NodeSpec",
     "PiecewiseLinearFPM",
@@ -83,6 +103,7 @@ __all__ = [
     "SimulatedExecutor",
     "SpeedModel",
     "app_time_2d",
+    "bank_repartition_2d",
     "cpm_partition",
     "cpm_partition_2d",
     "dfpa",
@@ -101,6 +122,8 @@ __all__ = [
     "speed_fn_1d",
     "speed_fn_1d_batch",
     "speed_fn_2d",
+    "speed_fn_2d_batch",
     "time_fn_1d",
     "time_fn_1d_batch",
+    "time_fn_2d_batch",
 ]

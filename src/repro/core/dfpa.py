@@ -24,7 +24,14 @@ Extras beyond the bare paper loop (all flagged, all default-compatible):
   information from every repeat via measurement noise; the probe recovers
   the same effect deterministically.)  If no unseen neighbour exists, DFPA
   stops and reports the best measured round;
-* ``min_units`` — keep every processor participating (the matrix apps do).
+* ``min_units`` — keep every processor participating (the matrix apps do);
+* ``backend="jax"`` — the FPM estimates additionally live on device as a
+  ``JaxModelBank`` *carry*: every round's observations are folded in with one
+  vectorized sorted insert (``fold_in``) instead of rebuilding the padded
+  arrays from the ``p`` scalar models, and every re-partition runs the jitted
+  device bisection.  The scalar estimates are still maintained (they are the
+  ``DFPAResult.models`` contract); what the carry eliminates is the
+  ``O(p*k)`` host rebuild per re-partition.
 """
 
 from __future__ import annotations
@@ -70,6 +77,7 @@ def dfpa(
     warm_models: Optional[Sequence[PiecewiseLinearFPM]] = None,
     warm_start_d: Optional[Sequence[int]] = None,
     probe_budget: Optional[int] = None,
+    backend: str = "numpy",
 ) -> DFPAResult:
     """Run DFPA over ``executor``; see module docstring."""
     p = executor.num_procs
@@ -79,12 +87,26 @@ def dfpa(
         raise ValueError(f"DFPA requires n >= p (n={n}, p={p})")
     if eps <= 0:
         raise ValueError("eps must be positive")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
 
     models: List[PiecewiseLinearFPM] = (
         [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm_models]
         if warm_models is not None
         else [PiecewiseLinearFPM() for _ in range(p)]
     )
+
+    # Device-resident model carry: built once, then updated in place by the
+    # vectorized fold-in — the re-partition never rebuilds it from scalars.
+    carry = None
+    if backend == "jax":
+        from .modelbank_jax import JaxModelBank
+
+        carry = (
+            JaxModelBank.from_models(models)
+            if any(m.num_points > 0 for m in models)
+            else JaxModelBank.empty(p)
+        )
 
     history: List[Tuple[List[int], List[float]]] = []
     seen: Dict[Tuple[int, ...], List[float]] = {}
@@ -93,13 +115,23 @@ def dfpa(
     probes_left = probe_budget
 
     def measure(d: List[int]) -> List[float]:
+        nonlocal carry
         times = executor.run(d)
         history.append((list(d), list(times)))
         seen[tuple(d)] = list(times)
         for i, (di, ti) in enumerate(zip(d, times)):
             if di > 0 and ti > 0:
                 models[i].add_point(float(di), di / ti)  # s_i(d_i) = d_i / t_i
+        if carry is not None:
+            darr = [float(di) for di in d]
+            sarr = [di / ti if (di > 0 and ti > 0) else 1.0 for di, ti in zip(d, times)]
+            valid = [di > 0 and ti > 0 for di, ti in zip(d, times)]
+            carry = carry.fold_in(darr, sarr, valid)
         return list(times)
+
+    def repartition() -> List[int]:
+        src = carry if carry is not None else models
+        return partition_units(src, n, caps, min_units=min_units, backend=backend)
 
     # Step 1: initial distribution — even split (paper), or the warm-start
     # partition when prior estimates exist (elastic restart path).
@@ -108,7 +140,7 @@ def dfpa(
         if sum(d) != n or len(d) != p:
             raise ValueError("warm_start_d must be a length-p partition of n")
     elif warm_models is not None and all(m.num_points > 0 for m in models):
-        d = partition_units(models, n, caps, min_units=min_units)
+        d = repartition()
     else:
         d = _even(n, p)
     times = measure(d)
@@ -124,10 +156,11 @@ def dfpa(
             return DFPAResult(list(d), list(times), it, True, imb, models, history)
         if it >= max_iter:
             return DFPAResult(best_d, best_t, it, False, best_imb, models, history)
-        # Steps 3+5: models already updated inside measure(); step 4:
-        # re-partition (partition_units banks the piecewise estimates itself —
-        # one array op per bisection step instead of p Python calls).
-        d_new = partition_units(models, n, caps, min_units=min_units)
+        # Steps 3+5: models already updated inside measure() (and folded into
+        # the device carry on the jax backend); step 4: re-partition
+        # (partition_units banks the piecewise estimates itself — one array
+        # op per bisection step instead of p Python calls).
+        d_new = repartition()
         if tuple(d_new) in seen:
             t_seen = seen[tuple(d_new)]
             imb_seen = imbalance(t_seen)

@@ -31,6 +31,40 @@ The bank is the inner loop of the vectorized partitioners in
 array op instead of ``p`` Python calls.  The scalar ``SpeedModel`` protocol
 survives as a thin adapter (``row()`` / ``to_models()``), so existing call
 sites keep working unchanged.
+
+Three backends, one semantics
+-----------------------------
+
+Three implementations of the same partitioning algorithm coexist, and
+``tests/test_modelbank_jax.py`` fuzz-locks them together:
+
+* **scalar** (``fpm.py`` + the ``_scalar`` helpers in ``partition.py``) —
+  one Python object per processor.  Selected automatically when a model has
+  no piecewise representation (``AnalyticModel``: FFMPA baselines, oracle
+  partitions over raw time functions) or explicitly with
+  ``vectorize=False``.  This is the semantics reference: both banked paths
+  mirror its closed-form per-segment feasibility test expression for
+  expression.
+* **numpy bank** (this module; the default, ``backend="numpy"``) — padded
+  ``[p, k]`` arrays on the host, one numpy pass per bisection step, lazy-heap
+  integer completion.  The right path for host-side control loops at any
+  fleet size; no accelerator or warm-up required.
+* **jax bank** (``modelbank_jax.py``, ``backend="jax"``) — the same padded
+  layout as device arrays, the whole ``t*`` search and greedy completion
+  under ``jax.jit`` (fixed-iteration ``lax.fori_loop`` bisection,
+  masked-argmin completion), plus ``fold_in`` so DFPA and the
+  ``BalanceController`` keep the bank as a device-resident carry across
+  rounds.  Pick it when repartitioning must compose with a jitted training
+  step or run at high frequency: after the one-time compile a repartition
+  costs microseconds.  With x64 enabled its element-wise float ops are
+  IEEE-identical to numpy's, and allocations match the numpy bank
+  bit-for-bit; in float32 they may differ by a unit.
+
+All three raise the same ``ValueError`` s on infeasible inputs (``sum(caps)
+< n``, ``min_units * p > n``, any ``cap < min_units``, empty models with
+positive caps), and all three produce allocations that sum exactly to ``n``
+with identical makespans (tie-breaks may place a leftover unit differently
+only between the scalar and banked continuous solvers' float paths).
 """
 
 from __future__ import annotations

@@ -1,0 +1,644 @@
+"""JAX-jitted ModelBank: the on-device third backend of the partitioner.
+
+``JaxModelBank`` holds the same padded ``xs[p, k]`` / ``ss[p, k]`` /
+``counts[p]`` layout as the numpy :class:`~repro.core.modelbank.ModelBank`,
+as ``jnp`` arrays, and evaluates the same three model queries as pure array
+ops.  The ``t*`` search of the geometric partitioner runs entirely on device:
+
+  * exponential bracketing as a ``lax.while_loop`` (masked per batch element,
+    so a stacked ``[q, p, k]`` bank bisects every column's ``t*``
+    simultaneously);
+  * bisection as a fixed-iteration ``lax.fori_loop`` carrying ``(lo, hi,
+    done)`` — the ``done`` flag reproduces the numpy path's early-exit
+    semantics exactly, so the two backends take bit-identical branch
+    sequences;
+  * the greedy integer completion as a masked lexicographic-argmin pass
+    (smallest ``(time(d+1), -frac_remainder, index)``) instead of a Python
+    heap — one ``O(p)`` argmin per leftover unit, with only the winning
+    row's key recomputed, mirroring the lazy-heap refresh.
+
+Every formula mirrors the numpy implementation expression-for-expression;
+with float64 enabled (``jax.config.update("jax_enable_x64", True)`` or the
+``jax.experimental.enable_x64`` context) the element-wise ops are IEEE-double
+identical to numpy, so allocations match the numpy bank bit-for-bit (the
+acceptance gate of ``benchmarks/partition_scale.py --backend jax``).  Without
+x64 the math runs in float32 and allocations may differ by a unit — fine for
+steering, not for the parity tests.
+
+Dtype plumbing is explicit throughout: the bank's array dtype (float64 under
+x64, float32 otherwise) flows into every constant and scalar operand, so no
+silent upcasts/downcasts occur inside ``jit``.
+
+``fold_in`` is the vectorized sorted insert that lets DFPA and the
+``BalanceController`` keep the bank as a *device-resident carry* across
+rounds — one ``[p]``-wide masked shift per round instead of rebuilding the
+padded arrays from ``p`` scalar models (the ROADMAP's observation fold-in
+item).  The carry buffers are donated to the update where the backend
+supports donation (no-op on CPU).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .modelbank import ModelBank
+
+__all__ = ["JaxModelBank"]
+
+# Buffer donation is a no-op (and warns) on CPU; donate the fold-in carry
+# only where the platform actually reuses the buffers.  When donation is on,
+# fold_in invalidates the previous bank's buffers — holders of snapshots
+# (e.g. BalanceController.device_bank callers) must copy() first;
+# DONATES_CARRY tells them whether that matters on this platform.
+_DONATE = (0, 1, 2) if jax.default_backend() != "cpu" else ()
+DONATES_CARRY = bool(_DONATE)
+
+
+# ---------------------------------------------------------------------------
+# Batched model queries (leading batch dims allowed: [..., p, k])
+# ---------------------------------------------------------------------------
+
+
+def _edges(xs, ss, counts):
+    last = jnp.maximum(counts - 1, 0)
+    last_x = jnp.take_along_axis(xs, last[..., None], axis=-1)[..., 0]
+    last_s = jnp.take_along_axis(ss, last[..., None], axis=-1)[..., 0]
+    return xs[..., 0], ss[..., 0], last_x, last_s
+
+
+def _speed(xs, ss, counts, x):
+    """Mirror of ``ModelBank.speed`` (NaN on empty rows)."""
+    first_x, first_s, last_x, last_s = _edges(xs, ss, counts)
+    k = jnp.sum(xs <= x[..., None], axis=-1) - 1
+    k = jnp.clip(k, 0, jnp.maximum(counts - 2, 0))
+    kp1 = jnp.minimum(k + 1, xs.shape[-1] - 1)
+    x0 = jnp.take_along_axis(xs, k[..., None], axis=-1)[..., 0]
+    x1 = jnp.take_along_axis(xs, kp1[..., None], axis=-1)[..., 0]
+    s0 = jnp.take_along_axis(ss, k[..., None], axis=-1)[..., 0]
+    s1 = jnp.take_along_axis(ss, kp1[..., None], axis=-1)[..., 0]
+    one = jnp.asarray(1.0, xs.dtype)
+    denom = jnp.where(x1 > x0, x1 - x0, one)
+    w = (x - x0) / denom
+    interior = s0 + w * (s1 - s0)
+    s = jnp.where(x <= first_x, first_s, jnp.where(x >= last_x, last_s, interior))
+    return jnp.where(counts > 0, s, jnp.asarray(jnp.nan, xs.dtype))
+
+
+def _time(xs, ss, counts, x):
+    zero = jnp.asarray(0.0, xs.dtype)
+    return jnp.where(x > zero, x / _speed(xs, ss, counts, x), zero)
+
+
+def _alloc_at_time(xs, ss, counts, t, caps):
+    """Mirror of ``ModelBank.alloc_at_time``; ``t`` has the batch shape
+    (scalar for a single bank, ``[q]`` for a stacked one)."""
+    dt = xs.dtype
+    zero, one = jnp.asarray(0.0, dt), jnp.asarray(1.0, dt)
+    t = jnp.asarray(t, dt)
+    tb = t[..., None]  # broadcast against [..., p]
+    first_x, first_s, last_x, last_s = _edges(xs, ss, counts)
+
+    # Region [0, x_1]: constant speed ss[..., 0].
+    best = jnp.minimum(tb * first_s, jnp.minimum(first_x, caps))
+
+    # Interior segments, all at once (static branch on the padded width).
+    k_max = xs.shape[-1]
+    if k_max >= 2:
+        x0, x1 = xs[..., :-1], xs[..., 1:]
+        s0, s1 = ss[..., :-1], ss[..., 1:]
+        seg = jnp.arange(k_max - 1)
+        valid = (
+            (seg < (counts - 1)[..., None])
+            & (x0 < caps[..., None])
+            & (x1 > x0)
+        )
+        x1c = jnp.minimum(x1, caps[..., None])
+        denom = jnp.where(x1 > x0, x1 - x0, one)
+        m = (s1 - s0) / denom
+        tseg = tb[..., None]  # against [..., p, k-1]
+        a = one - tseg * m
+        b = tseg * (s0 - m * x0)
+        ub = b / jnp.where(a != zero, a, one)
+        cand = jnp.where(
+            a > zero,
+            jnp.where(ub >= x0, jnp.minimum(ub, x1c), zero),
+            jnp.where(
+                a == zero,
+                jnp.where(b >= zero, x1c, zero),
+                jnp.where(x1c >= ub, x1c, zero),
+            ),
+        )
+        cand = jnp.where(valid, cand, zero)
+        best = jnp.maximum(best, cand.max(axis=-1))
+
+    # Region [x_m, cap]: constant speed at the last observed point.
+    ub_r = tb * last_s
+    right = (caps > last_x) & (ub_r >= last_x) & (counts > 0)
+    best = jnp.maximum(best, jnp.where(right, jnp.minimum(ub_r, caps), zero))
+
+    best = jnp.where((caps > zero) & (counts > 0), best, zero)
+    return jnp.where(tb > zero, best, zero)
+
+
+def _total_alloc(xs, ss, counts, t, caps):
+    return _alloc_at_time(xs, ss, counts, t, caps).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# t* search: masked doubling + fixed-iteration bisection
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("max_steps",))
+def _partition_continuous_jit(xs, ss, counts, caps, n, rel_tol, max_steps):
+    dt = xs.dtype
+    zero = jnp.asarray(0.0, dt)
+    n = jnp.asarray(n, dt)
+    rel_tol = jnp.asarray(rel_tol, dt)
+    active = caps > zero
+
+    # Exponential search for an upper bound on t* (per batch element).
+    t_init = _time(xs, ss, counts, jnp.minimum(jnp.asarray(1.0, dt), caps))
+    hi = jnp.maximum(
+        zero, jnp.where(active, t_init, -jnp.inf).max(axis=-1)
+    )
+    hi = jnp.maximum(hi, jnp.asarray(1e-9, dt))
+
+    def _need(hi):
+        return _total_alloc(xs, ss, counts, hi, caps) < n
+
+    def dbl_cond(carry):
+        hi, i = carry
+        return jnp.any(_need(hi)) & (i < 200)
+
+    def dbl_body(carry):
+        hi, i = carry
+        hi = jnp.where(_need(hi), hi * 2.0, hi)
+        return hi, i + 1
+
+    hi, _ = lax.while_loop(dbl_cond, dbl_body, (hi, jnp.asarray(0, jnp.int32)))
+
+    # Bisection: fixed iteration count, early exit replicated via `done`
+    # (set AFTER the update, exactly like the numpy loop's break).
+    lo = jnp.zeros_like(hi)
+    done = jnp.zeros(hi.shape, dtype=bool)
+
+    def bis_body(_, carry):
+        lo, hi, done = carry
+        mid = 0.5 * (lo + hi)
+        ge = _total_alloc(xs, ss, counts, mid, caps) >= n
+        hi2 = jnp.where(~done & ge, mid, hi)
+        lo2 = jnp.where(~done & ~ge, mid, lo)
+        done2 = done | (hi2 - lo2 <= rel_tol * hi2)
+        return lo2, hi2, done2
+
+    lo, hi, done = lax.fori_loop(0, max_steps, bis_body, (lo, hi, done))
+    t_star = hi
+
+    alloc = _alloc_at_time(xs, ss, counts, t_star, caps)
+    total = alloc.sum(axis=-1)
+    excess = total - n
+    scaled = alloc - (excess[..., None] * (alloc / total[..., None]))
+    alloc = jnp.where(((total > zero) & (excess > zero))[..., None], scaled, alloc)
+    return alloc, t_star
+
+
+# ---------------------------------------------------------------------------
+# Integer partition: floor + masked take-back + masked-argmin completion
+# ---------------------------------------------------------------------------
+
+
+def _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover):
+    """Greedy completion for ONE bank (no leading batch dims; vmapped by the
+    caller for stacked banks).
+
+    Repeated masked lexicographic argmin over ``(time(d+1), -rem, index)`` —
+    identical tie-breaking to the numpy lazy heap.  The key vector is carried
+    and only the winner's entry is rewritten (a scatter, mirroring the heap's
+    single-entry refresh), so one leftover unit costs a handful of ``O(p)``
+    reduction passes instead of full-array rebuilds.
+    """
+    dt = xs.dtype
+    it = d.dtype
+    key0 = jnp.where((d + 1) <= caps_i, _time(xs, ss, counts, (d + 1).astype(dt)), jnp.inf)
+
+    def cond(carry):
+        _, leftover, _, _ = carry
+        return leftover > 0
+
+    def body(carry):
+        d, leftover, key, ok = carry
+        i0 = jnp.argmin(key)  # first index of the minimum
+        m1 = key[i0]
+        feasible = jnp.isfinite(m1)
+
+        def tie_break(_):
+            # >1 processor shares the exact minimal time: the heap orders
+            # them by (-rem, index) — largest fractional remainder wins.
+            tie = key == m1
+            r = jnp.where(tie, rem, -jnp.inf)
+            return jnp.argmax(tie & (r == r.max()))
+
+        i = lax.cond(jnp.sum(key == m1) > 1, tie_break, lambda _: i0, None)
+        take = feasible.astype(it)
+        d2 = d.at[i].add(take)
+        x_new = (d2[i] + 1).astype(dt)
+        t_new = _time(xs[i], ss[i], counts[i], x_new)
+        new_key = jnp.where((d2[i] + 1) <= caps_i[i], t_new, jnp.inf)
+        key2 = key.at[i].set(jnp.where(feasible, new_key, key[i]))
+        leftover2 = jnp.where(feasible, leftover - 1, 0)
+        return d2, leftover2, key2, ok & feasible
+
+    d, _, _, ok = lax.while_loop(
+        cond, body, (d, leftover, key0, jnp.asarray(True))
+    )
+    return d, ok
+
+
+@partial(jax.jit, static_argnames=("max_steps",))
+def _partition_units_jit(xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps):
+    dt = xs.dtype
+    it = caps_i.dtype
+    n_f = jnp.asarray(n, dt)
+    caps_f = jnp.minimum(caps_i.astype(dt), n_f[..., None])  # continuous clip
+    alloc, _ = _partition_continuous_jit(xs, ss, counts, caps_f, n_f, rel_tol, max_steps)
+
+    d = jnp.maximum(jnp.asarray(min_units, it), jnp.floor(alloc).astype(it))
+    d = jnp.minimum(d, caps_i)
+    leftover = jnp.asarray(n, it) - d.sum(axis=-1)
+    p = xs.shape[-2]
+    idx = jnp.arange(p)
+
+    # -- take-back (min_units overshoot): largest per-unit time first,
+    #    round-robin — the stable descending order of the numpy path.
+    per_unit = _time(xs, ss, counts, d.astype(dt)) / jnp.maximum(d, 1)
+    order = jnp.argsort(-per_unit, axis=-1, stable=True)
+
+    def tb_cond(carry):
+        _, leftover, _ = carry
+        return jnp.any(leftover < 0)
+
+    def tb_body(carry):
+        d, leftover, kk = carry
+        i = jnp.take_along_axis(order, (kk % p)[..., None], axis=-1)[..., 0]
+        d_i = jnp.take_along_axis(d, i[..., None], axis=-1)[..., 0]
+        take = (leftover < 0) & (d_i > min_units)
+        d = d - ((idx == i[..., None]) & take[..., None]).astype(it)
+        return d, leftover + take.astype(it), kk + 1
+
+    kk0 = jnp.zeros(leftover.shape, it)
+    d, leftover, _ = lax.while_loop(tb_cond, tb_body, (d, leftover, kk0))
+
+    # -- greedy completion (see _complete_greedy_one); stacked banks flatten
+    #    their leading dims and vmap, so every column completes in the same
+    #    device program (lanes mask out as their leftovers hit zero).
+    rem = alloc - jnp.floor(alloc)
+    batch = xs.shape[:-2]
+    if batch:
+        b = int(np.prod(batch))
+        p_dim, k_dim = xs.shape[-2], xs.shape[-1]
+        d, ok = jax.vmap(_complete_greedy_one)(
+            xs.reshape(b, p_dim, k_dim),
+            ss.reshape(b, p_dim, k_dim),
+            counts.reshape(b, p_dim),
+            caps_i.reshape(b, p_dim),
+            d.reshape(b, p_dim),
+            rem.reshape(b, p_dim),
+            leftover.reshape(b),
+        )
+        d = d.reshape(*batch, p_dim)
+        ok = ok.reshape(batch)
+    else:
+        d, ok = _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover)
+    return d, ok
+
+
+@partial(jax.jit, donate_argnums=_DONATE)
+def _fold_in_jit(xs, ss, counts, x, s, valid):
+    """Vectorized sorted insert of one ``(x_i, s_i)`` observation per row.
+
+    Exactly ``PiecewiseLinearFPM.add_point`` semantics, for all rows at once:
+    replace the speed on an exact duplicate ``x``, otherwise shift-insert at
+    the bisect position and re-pad with the row's (possibly new) last point.
+    Rows with ``valid[i] == False`` are untouched.
+    """
+    k = xs.shape[-1]
+    j = jnp.arange(k)
+    in_prefix = j < counts[..., None]
+    dup = in_prefix & (xs == x[..., None])
+    has_dup = jnp.any(dup, axis=-1)
+    do_replace = valid & has_dup
+    do_insert = valid & ~has_dup
+
+    ss = jnp.where(dup & do_replace[..., None], s[..., None], ss)
+
+    pos = jnp.sum(in_prefix & (xs < x[..., None]), axis=-1)
+    jm1 = jnp.maximum(j - 1, 0)
+    xs_prev, ss_prev = xs[..., jm1], ss[..., jm1]
+    at = j == pos[..., None]
+    before = j < pos[..., None]
+    xs_ins = jnp.where(before, xs, jnp.where(at, x[..., None], xs_prev))
+    ss_ins = jnp.where(before, ss, jnp.where(at, s[..., None], ss_prev))
+    new_counts = counts + do_insert.astype(counts.dtype)
+    last = jnp.maximum(new_counts - 1, 0)
+    last_x = jnp.take_along_axis(xs_ins, last[..., None], axis=-1)
+    last_s = jnp.take_along_axis(ss_ins, last[..., None], axis=-1)
+    pad = j >= new_counts[..., None]
+    xs_ins = jnp.where(pad, last_x, xs_ins)
+    ss_ins = jnp.where(pad, last_s, ss_ins)
+
+    ins = do_insert[..., None]
+    return (
+        jnp.where(ins, xs_ins, xs),
+        jnp.where(ins, ss_ins, ss),
+        new_counts,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The bank
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class JaxModelBank:
+    """Device-resident padded FPM bank; accepts leading batch dims
+    (``[p, k]`` for one fleet, ``[q, p, k]`` for a stacked 2-D grid).
+
+    ``max_count`` (host-side upper bound on ``counts.max()``) and
+    ``empty_rows`` (host-side ``counts == 0`` mirror) keep the hot paths —
+    fold-in growth checks and per-repartition feasibility validation — free
+    of blocking device->host syncs; ``None`` means unknown (computed and
+    cached on first use).
+    """
+
+    xs: jnp.ndarray
+    ss: jnp.ndarray
+    counts: jnp.ndarray
+    max_count: Optional[int] = None
+    empty_rows: Optional[np.ndarray] = None
+
+    is_jax = True  # duck-type marker for the partition.py dispatcher
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_bank(cls, bank: ModelBank) -> "JaxModelBank":
+        return cls(
+            xs=jnp.asarray(bank.xs),
+            ss=jnp.asarray(bank.ss),
+            counts=jnp.asarray(bank.counts),
+            max_count=int(bank.counts.max(initial=0)),
+            empty_rows=np.asarray(bank.counts) == 0,
+        )
+
+    @classmethod
+    def from_models(cls, models: Sequence[object]) -> "JaxModelBank":
+        """Adapt scalar models (``TypeError`` for non-piecewise ones —
+        callers fall back to the host paths)."""
+        return cls.from_bank(ModelBank.from_models(models))
+
+    @classmethod
+    def empty(cls, p: int, k: int = 8) -> "JaxModelBank":
+        """A bank of ``p`` empty rows (the cold-start DFPA carry)."""
+        return cls(
+            xs=jnp.zeros((p, k)),
+            ss=jnp.zeros((p, k)),
+            counts=jnp.zeros((p,), dtype=jax.dtypes.canonicalize_dtype(np.int64)),
+            max_count=0,
+            empty_rows=np.ones((p,), dtype=bool),
+        )
+
+    @classmethod
+    def stack(cls, banks: Sequence["JaxModelBank"]) -> "JaxModelBank":
+        """Stack ``q`` same-``p`` banks into one ``[q, p, k]`` bank so every
+        column's ``t*`` bisects simultaneously (the 2-D partitioner)."""
+        k = max(int(b.xs.shape[-1]) for b in banks)
+        padded = [b._padded_to(k) for b in banks]
+        return cls(
+            xs=jnp.stack([px for px, _ in padded]),
+            ss=jnp.stack([ps for _, ps in padded]),
+            counts=jnp.stack([b.counts for b in banks]),
+            max_count=max(b._max_count_bound() for b in banks),
+            empty_rows=np.stack([b._empty_rows_host() for b in banks]),
+        )
+
+    def _padded_to(self, k: int):
+        extra = k - int(self.xs.shape[-1])
+        if extra <= 0:
+            return self.xs, self.ss
+        # padding repeats the last column (== the row's last point, or the
+        # zeros of an empty row) — same convention as from_point_lists.
+        rep_x = jnp.repeat(self.xs[..., -1:], extra, axis=-1)
+        rep_s = jnp.repeat(self.ss[..., -1:], extra, axis=-1)
+        return (
+            jnp.concatenate([self.xs, rep_x], axis=-1),
+            jnp.concatenate([self.ss, rep_s], axis=-1),
+        )
+
+    def to_bank(self) -> ModelBank:
+        """Host snapshot as the numpy :class:`ModelBank` (single bank only)."""
+        if self.xs.ndim != 2:
+            raise ValueError("to_bank() requires an unbatched [p, k] bank")
+        return ModelBank(
+            xs=np.asarray(self.xs, dtype=np.float64),
+            ss=np.asarray(self.ss, dtype=np.float64),
+            counts=np.asarray(self.counts, dtype=np.int64),
+        )
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def p(self) -> int:
+        return int(self.xs.shape[-2])
+
+    def __len__(self) -> int:
+        return self.p
+
+    @property
+    def dtype(self):
+        return self.xs.dtype
+
+    # -- batched evaluation (device) -----------------------------------------
+
+    def speed(self, x) -> jnp.ndarray:
+        x = jnp.broadcast_to(jnp.asarray(x, self.dtype), self.counts.shape)
+        return _speed(self.xs, self.ss, self.counts, x)
+
+    def time(self, x) -> jnp.ndarray:
+        x = jnp.broadcast_to(jnp.asarray(x, self.dtype), self.counts.shape)
+        return _time(self.xs, self.ss, self.counts, x)
+
+    def alloc_at_time(self, t, caps) -> jnp.ndarray:
+        caps = jnp.broadcast_to(jnp.asarray(caps, self.dtype), self.counts.shape)
+        return _alloc_at_time(self.xs, self.ss, self.counts, t, caps)
+
+    def total_alloc(self, t, caps) -> jnp.ndarray:
+        return self.alloc_at_time(t, caps).sum(axis=-1)
+
+    def scaled(self, speed_scale) -> "JaxModelBank":
+        """New bank with every row's speeds scaled (2-D column-width rescale).
+
+        Where ``fold_in`` donates its carry the shared ``xs``/``counts``
+        buffers are copied, so folding either bank cannot invalidate the
+        other; on CPU they alias harmlessly.
+        """
+        scale = jnp.broadcast_to(jnp.asarray(speed_scale, self.dtype), self.counts.shape)
+        xs = jnp.array(self.xs) if DONATES_CARRY else self.xs
+        counts = jnp.array(self.counts) if DONATES_CARRY else self.counts
+        return JaxModelBank(
+            xs=xs, ss=self.ss * scale[..., None], counts=counts,
+            max_count=self.max_count, empty_rows=self.empty_rows,
+        )
+
+    def copy(self) -> "JaxModelBank":
+        """Deep copy of the device buffers.  Needed by holders of a snapshot
+        on platforms where ``fold_in`` donates its carry (``DONATES_CARRY``):
+        the original buffers are invalidated by the next fold."""
+        return JaxModelBank(
+            xs=jnp.array(self.xs), ss=jnp.array(self.ss),
+            counts=jnp.array(self.counts), max_count=self.max_count,
+            empty_rows=self.empty_rows,
+        )
+
+    def _max_count_bound(self) -> int:
+        """Host-side upper bound on ``counts.max()`` (syncs once if unknown,
+        then stays host-tracked)."""
+        if self.max_count is None:
+            self.max_count = int(np.asarray(self.counts).max(initial=0))
+        return self.max_count
+
+    def _empty_rows_host(self) -> np.ndarray:
+        """Host-side ``counts == 0`` mirror (syncs once if unknown, then
+        maintained by ``fold_in`` without further transfers)."""
+        if self.empty_rows is None:
+            self.empty_rows = np.asarray(self.counts) == 0
+        return self.empty_rows
+
+    # -- the jitted partitioners --------------------------------------------
+
+    def _check_feasible(self, caps: np.ndarray, n) -> None:
+        if np.any((caps > 0.0) & self._empty_rows_host()):
+            raise ValueError("empty FPM")
+
+    def partition_continuous(
+        self, n, caps=None, *, rel_tol: float = 1e-12, max_steps: int = 200
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Continuous optimal partition on device; ``n`` may be batched for a
+        stacked bank.  Returns ``(allocations, t_star)`` as jnp arrays."""
+        shape = self.counts.shape
+        # Caps are validated host-side first, then uploaded ONCE — the hot
+        # repartition path never reads device memory back.
+        if caps is not None:
+            caps_host = np.broadcast_to(np.asarray(caps, dtype=np.float64), shape)
+        else:
+            caps_host = np.broadcast_to(
+                np.asarray(n, dtype=np.float64)[..., None], shape
+            )
+        self._check_feasible(caps_host, n)
+        return _partition_continuous_jit(
+            self.xs, self.ss, self.counts,
+            jnp.asarray(caps_host, self.dtype),
+            jnp.asarray(n, self.dtype),
+            jnp.asarray(rel_tol, self.dtype),
+            max_steps,
+        )
+
+    def partition_units(
+        self, n, caps=None, *, min_units: int = 0, max_steps: int = 200
+    ) -> np.ndarray:
+        """Integer partition on device; host-side feasibility checks raise
+        the same ``ValueError`` s as the scalar and numpy-bank paths.
+
+        ``n`` is a scalar (or ``[q]`` for a stacked bank, partitioning every
+        column simultaneously).  Returns the host ``int`` allocation array.
+        """
+        shape = self.counts.shape
+        p = shape[-1]
+        n_host = np.broadcast_to(np.asarray(n), shape[:-1])
+        if np.any(n_host < 0):
+            raise ValueError("n must be non-negative")
+        if np.any(min_units * p > n_host):
+            raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
+        idtype = self.counts.dtype
+        # Host-side caps first (validation below), one device upload after —
+        # no blocking device->host round-trips on the repartition hot path.
+        if caps is None:
+            caps_host = np.broadcast_to(
+                np.asarray(n_host, dtype=np.int64)[..., None], shape
+            )
+        else:
+            caps_host = np.broadcast_to(np.asarray(caps, dtype=np.int64), shape)
+        if min_units > 0 and np.any(caps_host < min_units):
+            i = int(np.argmax(np.reshape(caps_host < min_units, (-1,))))
+            raise ValueError(
+                f"min_units={min_units} infeasible: cap {int(caps_host.reshape(-1)[i])}"
+                f" < min_units"
+            )
+        clipped = np.minimum(caps_host.astype(np.float64), n_host[..., None].astype(np.float64))
+        short = clipped.sum(axis=-1) < n_host
+        if np.any(short):
+            i = int(np.argmax(np.reshape(short, (-1,))))
+            raise ValueError(
+                f"infeasible: sum(caps)={float(clipped.reshape(-1, p)[i].sum())} "
+                f"< n={float(np.reshape(n_host, (-1,))[i])}"
+            )
+        self._check_feasible(caps_host.astype(np.float64), n)
+        d, ok = _partition_units_jit(
+            self.xs, self.ss, self.counts,
+            jnp.asarray(caps_host, idtype),
+            jnp.asarray(n_host),
+            jnp.asarray(int(min_units), idtype),
+            jnp.asarray(1e-12, self.dtype),
+            max_steps,
+        )
+        if not bool(np.all(np.asarray(ok))):
+            raise ValueError("caps infeasible during integer completion")
+        return np.asarray(d)
+
+    # -- device-resident observation fold-in ---------------------------------
+
+    def fold_in(self, x, s, valid=None) -> "JaxModelBank":
+        """Insert one observation ``(x_i, s_i)`` per row (vectorized sorted
+        insert; duplicate ``x`` replaces the speed).  Returns the updated
+        bank; the old buffers are donated where the platform supports it.
+        Grows the padded width (by doubling) when any row is full."""
+        x = jnp.broadcast_to(jnp.asarray(x, self.dtype), self.counts.shape)
+        s = jnp.broadcast_to(jnp.asarray(s, self.dtype), self.counts.shape)
+        # valid is host data in every caller (DFPA / BalanceController build
+        # Python lists); mirror it on the host so empty_rows stays host-
+        # tracked, then upload.
+        if valid is None:
+            valid_host = np.ones(self.counts.shape, dtype=bool)
+        else:
+            valid_host = np.broadcast_to(np.asarray(valid, bool), self.counts.shape)
+        valid = jnp.asarray(valid_host)
+        xs, ss = self.xs, self.ss
+        k = int(xs.shape[-1])
+        bound = self._max_count_bound()
+        if bound >= k:
+            # The host-tracked bound overcounts duplicate-x folds (they
+            # replace a speed without growing counts), so before paying for
+            # a width doubling — new shape, new jit traces — resync the true
+            # maximum (a [p]-int transfer, at most once per k folds).  A
+            # steady-state carry re-observing the same distribution keeps
+            # its width (and its compiled kernels) forever.
+            bound = int(np.asarray(self.counts).max(initial=0))
+            self.max_count = bound
+            if bound >= k:
+                k = max(2 * k, 1)
+                xs, ss = self._padded_to(k)
+        nxs, nss, ncounts = _fold_in_jit(xs, ss, self.counts, x, s, valid)
+        return JaxModelBank(
+            xs=nxs, ss=nss, counts=ncounts, max_count=min(bound + 1, k),
+            empty_rows=self._empty_rows_host() & ~valid_host,
+        )

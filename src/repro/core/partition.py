@@ -18,19 +18,25 @@ Implements the building blocks the paper composes:
 * ``cpm_partition`` — the conventional constant-performance-model distribution
   (speed constants, proportional allocation), the paper's baseline.
 
-Two execution paths share identical semantics:
+Three execution paths share identical semantics (see the "three backends,
+one semantics" section in ``modelbank.py``):
 
-* **bank path** (default) — the models are adapted into a ``ModelBank`` and
-  every bisection step evaluates all ``p`` processors' segment inequalities in
-  ONE numpy pass; the integer completion uses a lazy heap.  This is the
-  fleet-scale path: thousands of processors partition in sub-millisecond time
-  (``benchmarks/partition_scale.py`` measures the gap).
+* **bank path** (default, ``backend="numpy"``) — the models are adapted into
+  a ``ModelBank`` and every bisection step evaluates all ``p`` processors'
+  segment inequalities in ONE numpy pass; the integer completion uses a lazy
+  heap.  This is the fleet-scale host path: thousands of processors partition
+  in sub-millisecond time (``benchmarks/partition_scale.py``).
+* **jax path** (``backend="jax"``) — the bank lives on device as a
+  ``JaxModelBank`` and the whole ``t*`` bisection + integer completion runs
+  under ``jax.jit`` (``modelbank_jax.py``); after the one-time compile a
+  repartition costs microseconds and composes with a jitted training step.
+  With x64 enabled its allocations are bit-identical to the numpy bank.
 * **scalar path** — the original per-model Python loop, used automatically
   when a model has no piecewise representation (``AnalyticModel``) or when
   ``vectorize=False`` is forced (the scaling benchmark's baseline).
 
-Both functions also accept a ``ModelBank`` directly in place of the model
-sequence.
+Both functions also accept a ``ModelBank`` (or ``JaxModelBank``) directly in
+place of the model sequence.
 """
 
 from __future__ import annotations
@@ -56,8 +62,31 @@ Models = Union[Sequence[SpeedModel], ModelBank]
 def _as_bank(models: Models) -> Optional[ModelBank]:
     if isinstance(models, ModelBank):
         return models
+    if getattr(models, "is_jax", False):
+        return models.to_bank()
     try:
         return ModelBank.from_models(models)
+    except TypeError:
+        return None
+
+
+def _as_jax_bank(models: Models):
+    """Adapt to a device bank, or ``None`` for non-piecewise models (scalar
+    fallback).  Imported lazily so the numpy paths never pay for jax."""
+    from .modelbank_jax import JaxModelBank
+
+    if getattr(models, "is_jax", False):
+        if models.xs.ndim != 2:
+            raise ValueError(
+                "stacked [q, p, k] banks don't fit the flat List[int] "
+                "contract; use JaxModelBank.partition_units / "
+                "bank_repartition_2d for batched partitions"
+            )
+        return models
+    if isinstance(models, ModelBank):
+        return JaxModelBank.from_bank(models)
+    try:
+        return JaxModelBank.from_models(models)
     except TypeError:
         return None
 
@@ -74,12 +103,17 @@ def partition_continuous(
     rel_tol: float = 1e-12,
     max_steps: int = 200,
     vectorize: bool = True,
+    backend: str = "numpy",
 ) -> Tuple[List[float], float]:
     """Continuous optimal partition of ``n`` units across ``models``.
 
     Returns ``(allocations, t_star)``.  ``caps`` bounds per-processor
     allocation (memory limits); infeasible caps raise ``ValueError``.
+    ``backend="jax"`` runs the bisection jitted on device (non-piecewise
+    models still fall back to the scalar host loop).
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
     p = len(models)
     if p == 0:
         raise ValueError("no processors")
@@ -90,6 +124,13 @@ def partition_continuous(
     if sum(caps) < n:
         raise ValueError(f"infeasible: sum(caps)={sum(caps)} < n={n}")
 
+    if backend == "jax" and vectorize:
+        jbank = _as_jax_bank(models)
+        if jbank is not None:
+            xs, t_star = jbank.partition_continuous(
+                float(n), caps, rel_tol=rel_tol, max_steps=max_steps
+            )
+            return [float(v) for v in xs], float(t_star)
     bank = _as_bank(models) if vectorize else None
     if bank is not None:
         return _partition_continuous_bank(bank, n, caps, rel_tol=rel_tol, max_steps=max_steps)
@@ -189,20 +230,38 @@ def partition_units(
     *,
     min_units: int = 0,
     vectorize: bool = True,
+    backend: str = "numpy",
 ) -> List[int]:
     """Integer partition of ``n`` equal computation units.
 
     Continuous solution -> floor -> greedy min-makespan completion.  With
     ``min_units > 0`` every processor receives at least that many units
     (the paper's matrix apps keep every processor participating).
+    ``backend="jax"`` runs the whole thing jitted on device.
     """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
     p = len(models)
     if n < 0:
         raise ValueError("n must be non-negative")
     if min_units * p > n:
         raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
     icaps = [int(c) for c in caps] if caps is not None else [n] * p
+    if min_units > 0:
+        # A cap below min_units makes {min_units <= d_i <= cap_i} empty; all
+        # three backends must refuse rather than silently hand the shortfall
+        # to the other processors.
+        for i, c in enumerate(icaps):
+            if c < min_units:
+                raise ValueError(
+                    f"min_units={min_units} infeasible: caps[{i}]={c} < min_units"
+                )
 
+    if backend == "jax" and vectorize:
+        jbank = _as_jax_bank(models)
+        if jbank is not None:
+            d = jbank.partition_units(n, icaps, min_units=min_units)
+            return [int(v) for v in d]
     bank = _as_bank(models) if vectorize else None
     if bank is not None:
         return _partition_units_bank(bank, n, icaps, min_units=min_units)

@@ -15,6 +15,13 @@ Implementation includes the paper's cost optimizations (§3.2 last page):
   * reuse all previous benchmark points (rescaled to the new column width);
   * skip re-partitioning a column whose width changed by < ``width_tol``;
   * warm-start each inner DFPA from the previous iteration's row heights.
+
+``backend="jax"`` forwards to the inner DFPA loops (their re-partitions run
+jitted on device), and :func:`bank_repartition_2d` exposes the fully batched
+variant: all ``q`` columns' model banks stacked into one ``[q, p, k]`` tensor
+whose ``t*`` bisections run *simultaneously* in a single jitted call — the
+device-side refresh used when widths move but no new benchmarks are wanted
+(simulator counterparts: ``speed_fn_2d_batch`` / ``time_fn_2d_batch``).
 """
 
 from __future__ import annotations
@@ -30,6 +37,7 @@ from .partition import cpm_partition, partition_units
 
 __all__ = [
     "Grid2DResult",
+    "bank_repartition_2d",
     "dfpa_partition_2d",
     "cpm_partition_2d",
     "ffmpa_partition_2d",
@@ -66,6 +74,47 @@ def _flat_imbalance(times: List[List[float]]) -> float:
     return imbalance([t for col in times for t in col])
 
 
+def bank_repartition_2d(
+    fpms: Sequence[Sequence[PiecewiseLinearFPM]],
+    fpm_width: Sequence[Sequence[Optional[int]]],
+    widths: Sequence[int],
+    M: int,
+    *,
+    min_units: int = 1,
+    backend: str = "numpy",
+) -> List[List[int]]:
+    """Re-partition EVERY column's rows from the surviving FPM estimates in
+    one call — no new benchmarks.
+
+    ``fpms[i][j]`` / ``fpm_width[i][j]`` are the per-(row, column) estimates
+    and the widths they were observed at (the state ``dfpa_partition_2d``
+    maintains); each column's bank is rescaled to its current width (speed in
+    row units ~ 1/width) and, on the jax backend, all ``q`` banks are stacked
+    into one ``[q, p, k]`` tensor whose ``t*`` bisections run simultaneously
+    in a single jitted device call.  ``backend="numpy"`` loops the columns on
+    the host (same allocations).  Returns ``rows[j][i]``.
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    p, q = len(fpms), len(widths)
+    for i in range(p):
+        for j in range(q):
+            if fpm_width[i][j] is None or fpms[i][j].num_points == 0:
+                raise ValueError(f"no FPM estimate for processor ({i}, {j})")
+    col_banks = []
+    for j in range(q):
+        bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
+        scale = [fpm_width[i][j] / widths[j] for i in range(p)]
+        col_banks.append(bank.scaled(scale))
+    if backend == "jax":
+        from .modelbank_jax import JaxModelBank
+
+        stacked = JaxModelBank.stack([JaxModelBank.from_bank(b) for b in col_banks])
+        d = stacked.partition_units(M, min_units=min_units)
+        return [[int(v) for v in row] for row in d]
+    return [partition_units(b, M, min_units=min_units) for b in col_banks]
+
+
 def dfpa_partition_2d(
     grid: Sequence[Sequence[SpeedFn2D]],
     M: int,
@@ -76,6 +125,7 @@ def dfpa_partition_2d(
     inner_max_iter: int = 15,
     width_tol: float = 0.02,
     min_units: int = 1,
+    backend: str = "numpy",
 ) -> Grid2DResult:
     """DFPA-based nested 2-D partitioning over ground-truth speeds ``grid``.
 
@@ -130,6 +180,7 @@ def dfpa_partition_2d(
                 eps,
                 max_iter=inner_max_iter,
                 min_units=min_units,
+                backend=backend,
                 warm_models=warm,
                 warm_start_d=rows[j] if rows[j] is not None else None,
                 # Probe fixed points only on the COLD first partition of a

@@ -54,10 +54,12 @@ class BalanceController:
     min_units: int = 1
     smooth: float = 0.5  # EMA weight of the newest observation
     caps: Optional[Sequence[int]] = None  # per-group HBM unit capacity
+    backend: str = "numpy"  # "jax": device-resident bank + jitted partitioner
 
     models: List[PiecewiseLinearFPM] = field(default_factory=list)
     d: List[int] = field(default_factory=list)
     _ema: Dict[Tuple[int, int], float] = field(default_factory=dict)
+    _device_bank: Optional[object] = field(default=None, repr=False)
     rebalances: int = 0
     steps_observed: int = 0
 
@@ -76,6 +78,8 @@ class BalanceController:
         if len(times) != self.num_groups:
             raise ValueError("times length != num_groups")
         self.steps_observed += 1
+        speeds = [1.0] * self.num_groups
+        valid = [False] * self.num_groups
         for i, (di, ti) in enumerate(zip(self.d, times)):
             if di <= 0 or ti <= 0:
                 continue
@@ -84,10 +88,24 @@ class BalanceController:
             ema = ti if ema is None else (1 - self.smooth) * ema + self.smooth * ti
             self._ema[key] = ema
             self.models[i].add_point(float(di), di / ema)
+            speeds[i], valid[i] = di / ema, True
+        if self.backend == "jax":
+            # Fold the EMA-smoothed operating points into the device carry
+            # (duplicate d_i replaces the speed, exactly like add_point) —
+            # the jitted partitioner below reads the bank without a rebuild.
+            self._device_bank = self._carry_bank().fold_in(
+                [float(di) for di in self.d], speeds, valid
+            )
         if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
             return False
+        src = (
+            self._device_bank
+            if self.backend == "jax" and self._device_bank is not None
+            else self.models
+        )
         new_d = partition_units(
-            self.models, self.n_units, self.caps, min_units=self.min_units
+            src, self.n_units, self.caps,
+            min_units=self.min_units, backend=self.backend,
         )
         if new_d == self.d:
             return False
@@ -103,6 +121,32 @@ class BalanceController:
         use this instead of looping over the scalar models.
         """
         return ModelBank.from_models(self.models)
+
+    def _carry_bank(self):
+        """The internal fold-in carry (donation-eligible: its buffers may be
+        consumed by the next ``observe``)."""
+        if self._device_bank is not None:
+            return self._device_bank
+        from ..core.modelbank_jax import JaxModelBank
+
+        if any(m.num_points > 0 for m in self.models):
+            return JaxModelBank.from_models(self.models)
+        return JaxModelBank.empty(self.num_groups)
+
+    def device_bank(self):
+        """The ``JaxModelBank`` snapshot the jitted partitioner consumes.
+
+        With ``backend="jax"`` this is the incrementally maintained device
+        carry (observations folded in each step); otherwise it is built from
+        the scalar models on demand.  Either way the controller can hand it
+        straight to ``partition_units(..., backend="jax")``.  On platforms
+        where the fold-in donates its carry the snapshot is a copy, so the
+        next ``observe`` cannot invalidate the caller's reference.
+        """
+        from ..core.modelbank_jax import DONATES_CARRY
+
+        bank = self._carry_bank()
+        return bank.copy() if DONATES_CARRY else bank
 
     @property
     def imbalance_estimate(self) -> float:

@@ -114,3 +114,7 @@ class StragglerDetector:
         keys = [k for k in controller._ema if k[0] == group]
         for k in keys:
             del controller._ema[k]
+        # The controller's device-resident bank carry (backend="jax") now
+        # disagrees with the scalar models; drop it so it rebuilds lazily.
+        if getattr(controller, "_device_bank", None) is not None:
+            controller._device_bank = None

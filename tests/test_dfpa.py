@@ -1,7 +1,9 @@
 """DFPA: the paper's algorithm — convergence proposition, paper-faithfulness
 gates (§3.1), warm starts, and behavioural properties."""
 
+import json
 import math
+import pathlib
 
 import numpy as np
 import pytest
@@ -130,6 +132,40 @@ def test_grid5000_two_to_three_iterations():
         assert res.converged and res.iterations <= 3
         app = matmul_app_time_1d(tfns, res.d, n)
         assert ex.total_cost / app < 0.01
+
+
+# ---------------------------------------------------------------------------
+# Golden-trace regression: convergence behaviour is part of the contract
+# ---------------------------------------------------------------------------
+
+
+def test_dfpa_hcl_golden_trace():
+    """Round-by-round allocations and iteration counts on the HCL fixture,
+    committed to ``tests/golden/dfpa_hcl.json``.  Refactors of the model
+    carry / partition backends (this PR's fold-in, and future ones) must not
+    silently change convergence behaviour; if a change is intentional,
+    regenerate the golden file and say so in the PR."""
+    golden = json.loads(
+        (pathlib.Path(__file__).parent / "golden" / "dfpa_hcl.json").read_text()
+    )
+    n = golden["n"]
+    _, tfns = make_hcl_time_fns(n)
+    rows = _row_fns(tfns, n)
+    res = dfpa(
+        SimulatedExecutor(time_fns=rows),
+        n,
+        eps=golden["eps"],
+        min_units=golden["min_units"],
+    )
+    assert res.iterations == golden["iterations"]
+    assert res.converged == golden["converged"]
+    assert res.d == golden["final_d"]
+    assert res.points_per_proc == golden["points_per_proc"]
+    assert len(res.history) == len(golden["rounds"])
+    for (d, times), want in zip(res.history, golden["rounds"]):
+        assert d == want["d"]
+        assert times == pytest.approx(want["times"], rel=1e-12)
+    assert res.imbalance == pytest.approx(golden["imbalance"], rel=1e-12)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,14 @@
-"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+"""Pallas kernels vs pure-jnp oracles.
+
+Two lanes share the same case lists and check bodies:
+
+* default — ``interpret=True`` shape/dtype sweeps, runs everywhere (CPU CI);
+* ``-m compiled`` — the same sweeps with ``interpret=False``, exercising the
+  real Mosaic-compiled path.  Skipped automatically when no accelerator
+  backend is present; CI runs it as a non-blocking job so a real-TPU runner
+  lights it up without any test changes (first step of the ROADMAP's
+  real-TPU lane item).
+"""
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +22,14 @@ from repro.kernels.rglru import rglru_scan_pallas
 
 KEY = jax.random.PRNGKey(0)
 
+# The compiled lane needs a real accelerator: interpret=False on the CPU
+# backend would try (and fail) to lower Mosaic for TPU.
+compiled = pytest.mark.compiled
+needs_accelerator = pytest.mark.skipif(
+    jax.default_backend() == "cpu",
+    reason="compiled pallas lane requires a non-CPU jax backend",
+)
+
 
 def _rand(key, shape, dtype, scale=1.0):
     return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
@@ -21,28 +39,40 @@ def _rand(key, shape, dtype, scale=1.0):
 # matmul_update — the paper's kernel, TPU-native
 # ---------------------------------------------------------------------------
 
+MATMUL_DTYPES = [(jnp.float32, 2e-4), (jnp.bfloat16, 5e-2)]
+MATMUL_SHAPES = [
+    (128, 128, 128, 128, 128, 128),
+    (256, 512, 384, 128, 256, 128),
+    (512, 256, 1024, 256, 256, 512),
+    (128, 1024, 256, 64, 512, 256),
+]
 
-@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-4), (jnp.bfloat16, 5e-2)])
-@pytest.mark.parametrize(
-    "M,N,K,bm,bn,bk",
-    [
-        (128, 128, 128, 128, 128, 128),
-        (256, 512, 384, 128, 256, 128),
-        (512, 256, 1024, 256, 256, 512),
-        (128, 1024, 256, 64, 512, 256),
-    ],
-)
-def test_matmul_update_sweep(M, N, K, bm, bn, bk, dtype, atol):
+
+def _check_matmul_update(M, N, K, bm, bn, bk, dtype, atol, *, interpret):
     k1, k2, k3 = jax.random.split(KEY, 3)
     a = _rand(k1, (M, K), dtype)
     b = _rand(k2, (K, N), dtype)
     c = _rand(k3, (M, N), dtype)
-    out = matmul_update_pallas(c, a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    out = matmul_update_pallas(c, a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
     want = ref.matmul_update_ref(c, a, b)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(want, np.float32),
         atol=atol * np.sqrt(K), rtol=2e-2,
     )
+
+
+@pytest.mark.parametrize("dtype,atol", MATMUL_DTYPES)
+@pytest.mark.parametrize("M,N,K,bm,bn,bk", MATMUL_SHAPES)
+def test_matmul_update_sweep(M, N, K, bm, bn, bk, dtype, atol):
+    _check_matmul_update(M, N, K, bm, bn, bk, dtype, atol, interpret=True)
+
+
+@compiled
+@needs_accelerator
+@pytest.mark.parametrize("dtype,atol", MATMUL_DTYPES)
+@pytest.mark.parametrize("M,N,K,bm,bn,bk", MATMUL_SHAPES)
+def test_matmul_update_sweep_compiled(M, N, K, bm, bn, bk, dtype, atol):
+    _check_matmul_update(M, N, K, bm, bn, bk, dtype, atol, interpret=False)
 
 
 def test_matmul_update_rejects_indivisible():
@@ -57,30 +87,42 @@ def test_matmul_update_rejects_indivisible():
 # flash attention
 # ---------------------------------------------------------------------------
 
+FLASH_DTYPES = [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)]
+FLASH_CASES = [
+    (1, 2, 2, 128, 128, 64, dict(causal=True)),
+    (2, 4, 2, 128, 128, 64, dict(causal=True)),  # GQA
+    (2, 4, 1, 128, 128, 32, dict(causal=True)),  # MQA
+    (1, 2, 2, 128, 128, 64, dict(causal=True, window=32)),  # sliding window
+    (1, 2, 2, 128, 128, 64, dict(causal=True, softcap=30.0)),  # gemma softcap
+    (1, 2, 2, 128, 128, 64, dict(causal=False)),  # encoder
+    (1, 2, 2, 64, 256, 64, dict(causal=True)),  # right-aligned queries
+]
 
-@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 2e-2)])
-@pytest.mark.parametrize(
-    "B,H,Kv,Sq,Sk,D,kwargs",
-    [
-        (1, 2, 2, 128, 128, 64, dict(causal=True)),
-        (2, 4, 2, 128, 128, 64, dict(causal=True)),  # GQA
-        (2, 4, 1, 128, 128, 32, dict(causal=True)),  # MQA
-        (1, 2, 2, 128, 128, 64, dict(causal=True, window=32)),  # sliding window
-        (1, 2, 2, 128, 128, 64, dict(causal=True, softcap=30.0)),  # gemma softcap
-        (1, 2, 2, 128, 128, 64, dict(causal=False)),  # encoder
-        (1, 2, 2, 64, 256, 64, dict(causal=True)),  # right-aligned queries
-    ],
-)
-def test_flash_attention_sweep(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol):
+
+def _check_flash_attention(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol, *, interpret):
     k1, k2, k3 = jax.random.split(KEY, 3)
     q = _rand(k1, (B, H, Sq, D), dtype, 0.3)
     k = _rand(k2, (B, Kv, Sk, D), dtype, 0.3)
     v = _rand(k3, (B, Kv, Sk, D), dtype)
-    out = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=True, **kwargs)
+    out = flash_attention_pallas(q, k, v, bq=64, bk=64, interpret=interpret, **kwargs)
     want = ref.flash_attention_ref(q, k, v, **kwargs)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
     )
+
+
+@pytest.mark.parametrize("dtype,tol", FLASH_DTYPES)
+@pytest.mark.parametrize("B,H,Kv,Sq,Sk,D,kwargs", FLASH_CASES)
+def test_flash_attention_sweep(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol):
+    _check_flash_attention(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol, interpret=True)
+
+
+@compiled
+@needs_accelerator
+@pytest.mark.parametrize("dtype,tol", FLASH_DTYPES)
+@pytest.mark.parametrize("B,H,Kv,Sq,Sk,D,kwargs", FLASH_CASES)
+def test_flash_attention_sweep_compiled(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol):
+    _check_flash_attention(B, H, Kv, Sq, Sk, D, kwargs, dtype, tol, interpret=False)
 
 
 def test_flash_attention_matches_model_attention():
@@ -105,22 +147,32 @@ def test_flash_attention_matches_model_attention():
 # RG-LRU chunked recurrence
 # ---------------------------------------------------------------------------
 
+RGLRU_CASES = [
+    (1, 128, 128, 64, 128),
+    (2, 256, 512, 128, 256),
+    (3, 512, 256, 256, 128),
+]
 
-@pytest.mark.parametrize(
-    "B,S,D,bs,bd",
-    [
-        (1, 128, 128, 64, 128),
-        (2, 256, 512, 128, 256),
-        (3, 512, 256, 256, 128),
-    ],
-)
-def test_rglru_scan_sweep(B, S, D, bs, bd):
+
+def _check_rglru_scan(B, S, D, bs, bd, *, interpret):
     k1, k2 = jax.random.split(KEY)
     log_a = -jax.nn.softplus(jax.random.normal(k1, (B, S, D)))
     b = 0.1 * jax.random.normal(k2, (B, S, D))
-    out = rglru_scan_pallas(log_a, b, bs=bs, bd=bd, interpret=True)
+    out = rglru_scan_pallas(log_a, b, bs=bs, bd=bd, interpret=interpret)
     want = ref.rglru_scan_ref(log_a, b)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,D,bs,bd", RGLRU_CASES)
+def test_rglru_scan_sweep(B, S, D, bs, bd):
+    _check_rglru_scan(B, S, D, bs, bd, interpret=True)
+
+
+@compiled
+@needs_accelerator
+@pytest.mark.parametrize("B,S,D,bs,bd", RGLRU_CASES)
+def test_rglru_scan_sweep_compiled(B, S, D, bs, bd):
+    _check_rglru_scan(B, S, D, bs, bd, interpret=False)
 
 
 def test_rglru_matches_model_block_scan():
