@@ -1,20 +1,30 @@
-"""Fleet-scale partition latency: scalar vs numpy ModelBank vs jitted jax bank.
+"""Fleet-scale partition latency: scalar vs numpy ModelBank vs jitted jax
+bank — all driven through the ``SpeedStore``/``Scheduler`` facade.
 
 The paper's self-adaptability requirement is that computing an optimal
 distribution costs orders of magnitude less than the application it balances.
-This benchmark measures that cost directly for all three partition paths on
-synthetic heterogeneous fleets of p ∈ {10, 100, 1000, 10000} processor
+This benchmark measures that cost directly for all three partition backends
+on synthetic heterogeneous fleets of p ∈ {10, 100, 1000, 10000} processor
 groups (HCL-like piecewise-linear FPMs, ~6 observed points each):
 
-  * scalar — the seed implementation (``vectorize=False``): every bisection
-    step on ``t*`` is a p-long Python loop over per-model segment scans;
+  * scalar — the seed implementation (``SpeedStore`` backend ``"scalar"``):
+    every bisection step on ``t*`` is a p-long Python loop over per-model
+    segment scans;
   * bank   — the ``ModelBank`` path: one numpy pass per bisection step;
   * jax    — the ``JaxModelBank`` path: the whole t* search + integer
     completion under ``jax.jit``.  Two numbers matter: the one-time compile
-    cost, and the steady-state repartition latency afterwards — the
-    compile-once/repartition-many number the paper's self-adaptability
-    argument actually depends on (repartitioning happens every imbalance
-    event; compilation happens once per fleet shape).
+    cost, and the steady-state repartition latency afterwards.
+
+Facade-overhead columns: each banked backend is timed twice — as a *direct*
+kernel call (``_partition_units_bank`` / ``JaxModelBank.partition_units``)
+and through the facade (``SpeedStore.partition_units``: validation +
+pre-resolved dispatch).  ``facade_overhead_pct`` is the facade tax; the
+acceptance gate is <= 5% at p=1000 (exit 1 otherwise).
+
+Float32 drift column (full sweep, largest p): the jax backend re-runs with a
+float32 bank (dtype plumbing keeps the whole jitted pipeline in f32) and
+records the max/total unit drift vs the float64 numpy reference — the data
+for the ROADMAP's "can serving fleets run the cheaper dtype" question.
 
 The jax sweep runs with x64 enabled and asserts its allocations are
 BIT-IDENTICAL to the numpy bank at every swept p (exit code 1 otherwise —
@@ -34,7 +44,8 @@ import time
 
 import numpy as np
 
-from repro.core import ModelBank, PiecewiseLinearFPM, partition_units
+from repro.core import ModelBank, PiecewiseLinearFPM, SpeedStore
+from repro.core.partition import _partition_units_bank, _prep_unit_caps
 
 
 def make_fleet(p: int, seed: int = 0):
@@ -64,51 +75,123 @@ def best_of(fn, repeats: int) -> float:
     return best
 
 
+def best_of_pair(fn_a, fn_b, repeats: int):
+    """Interleaved timing for two implementations of the same work.
+
+    Returns ``(best_a, best_b, ratio)`` where ``ratio`` is the MEDIAN over
+    iterations of ``t_b / t_a`` *within the same iteration*.  Within one
+    iteration the two sides run back-to-back, so shared-container load noise
+    hits both together and their ratio stays honest even when the absolute
+    best-of times land in different load windows; the median then rejects
+    the iterations where a noise spike split the pair.  The facade-tax gate
+    uses this ratio, not the difference of bests."""
+    best_a = best_b = float("inf")
+    ratios = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn_a()
+        ta = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fn_b()
+        tb = time.perf_counter() - t0
+        best_a = min(best_a, ta)
+        best_b = min(best_b, tb)
+        ratios.append(tb / ta)
+    return best_a, best_b, float(np.median(ratios))
+
+
 def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
-              scalar_cutoff: int = 10**9):
+              scalar_cutoff: int = 10**9, f32_at: int = -1):
     if backend in ("jax", "both"):
         import jax
 
         # Bit-identical-to-numpy is the acceptance gate; that needs doubles.
         jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+
         from repro.core import JaxModelBank
 
     rows = []
     for p in ps:
         models = make_fleet(p, seed=p)
         bank = ModelBank.from_models(models)
+        bank_store = SpeedStore.from_bank(bank)
         n = units_per_proc * p
+        icaps = _prep_unit_caps(p, n, None, 1)
 
-        t_bank = best_of(lambda: partition_units(bank, n, min_units=1), repeats)
-        d_bank = partition_units(bank, n, min_units=1)
+        # Direct kernel vs the facade (validation + pre-resolved dispatch),
+        # interleaved so container-load drift cannot fake an overhead.  The
+        # pair repeats adapt to a ~1s budget: small-p ops are milliseconds,
+        # so dozens of samples keep the median ratio well under the shared-
+        # runner noise floor that a fixed 7 would leave it exposed to.
+        direct_fn = lambda: _partition_units_bank(bank, n, list(icaps), min_units=1)
+        facade_fn = lambda: bank_store.partition_units(n, min_units=1)
+        t_est = best_of(direct_fn, 1)
+        pair_reps = min(41, max(repeats, 7, int(1.0 / max(t_est, 1e-3))))
+        t_direct, t_facade, ratio = best_of_pair(direct_fn, facade_fn, pair_reps)
+        d_bank = bank_store.partition_units(n, min_units=1)
 
-        row = {"p": p, "n": n, "bank_s": t_bank}
+        row = {
+            "p": p,
+            "n": n,
+            "bank_s": t_direct,
+            "facade_s": t_facade,
+            "facade_overhead_pct": 100.0 * (ratio - 1.0),
+        }
         if backend in ("numpy", "both") and p <= scalar_cutoff:
+            scalar_store = SpeedStore.from_models(models, backend="scalar")
             t_scalar = best_of(
-                lambda: partition_units(models, n, min_units=1, vectorize=False), repeats
+                lambda: scalar_store.partition_units(n, min_units=1), repeats
             )
-            d_scalar = partition_units(models, n, min_units=1, vectorize=False)
+            d_scalar = scalar_store.partition_units(n, min_units=1)
             row["scalar_s"] = t_scalar
-            row["speedup"] = t_scalar / t_bank
+            row["speedup"] = t_scalar / t_direct
             row["max_unit_diff"] = int(max(abs(a - b) for a, b in zip(d_scalar, d_bank)))
         if backend in ("jax", "both"):
             jbank = JaxModelBank.from_bank(bank)
+            jax_store = SpeedStore.from_jax_bank(jbank)
 
-            def jax_partition():
-                return partition_units(jbank, n, min_units=1, backend="jax")
+            def jax_direct():
+                return jbank.partition_units(n, icaps, min_units=1)
+
+            def jax_facade():
+                return jax_store.partition_units(n, min_units=1)
 
             t0 = time.perf_counter()
-            d_jax = jax_partition()  # traces + compiles for this fleet shape
+            jax_direct()  # traces + compiles for this fleet shape
             t_compile = time.perf_counter() - t0
-            t_jax = best_of(jax_partition, max(repeats, 2))  # post-compile
+            t_est = best_of(jax_direct, 1)  # post-compile
+            jpair_reps = min(41, max(repeats, 7, int(1.0 / max(t_est, 1e-3))))
+            t_jax, t_jax_facade, jratio = best_of_pair(
+                jax_direct, jax_facade, jpair_reps
+            )  # interleaved
+            d_jax = jax_facade()
             row["jax_compile_s"] = t_compile
             row["jax_steady_s"] = t_jax
-            row["jax_vs_bank_speedup"] = t_bank / t_jax
+            row["jax_facade_s"] = t_jax_facade
+            row["jax_facade_overhead_pct"] = 100.0 * (jratio - 1.0)
+            row["jax_vs_bank_speedup"] = t_direct / t_jax
             row["jax_max_unit_diff"] = int(
                 max(abs(a - b) for a, b in zip(d_jax, d_bank))
             )
+            if p == f32_at:
+                # Same pipeline in float32: the bank's dtype flows through
+                # every jitted constant, so this is a true f32 run.
+                jb32 = JaxModelBank(
+                    xs=jnp.asarray(bank.xs, jnp.float32),
+                    ss=jnp.asarray(bank.ss, jnp.float32),
+                    counts=jnp.asarray(bank.counts),
+                )
+                d32 = jb32.partition_units(n, icaps, min_units=1)
+                diffs = np.abs(np.asarray(d32) - np.asarray(d_bank))
+                row["jax_f32_max_unit_diff"] = int(diffs.max())
+                row["jax_f32_total_unit_drift"] = int(diffs.sum())
+                row["jax_f32_drift_frac_of_n"] = float(diffs.sum() / n)
         rows.append(row)
-        msg = f"p={p:6d}  bank={t_bank * 1e3:9.3f} ms"
+        msg = (
+            f"p={p:6d}  bank={t_direct * 1e3:9.3f} ms"
+            f"  facade=+{row['facade_overhead_pct']:5.2f}%"
+        )
         if "scalar_s" in row:
             msg += (
                 f"  scalar={row['scalar_s'] * 1e3:10.3f} ms"
@@ -118,8 +201,14 @@ def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
         if "jax_steady_s" in row:
             msg += (
                 f"  jax={row['jax_steady_s'] * 1e3:9.3f} ms"
-                f" (compile {row['jax_compile_s']:6.2f} s)"
+                f" (compile {row['jax_compile_s']:6.2f} s,"
+                f" facade +{row['jax_facade_overhead_pct']:.2f}%)"
                 f"  jax_max|Δd|={row['jax_max_unit_diff']}"
+            )
+        if "jax_f32_max_unit_diff" in row:
+            msg += (
+                f"  f32|Δd|max={row['jax_f32_max_unit_diff']}"
+                f" Σ={row['jax_f32_total_unit_drift']}"
             )
         print(msg, flush=True)
     return rows
@@ -134,16 +223,25 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.quick:
-        ps, repeats, cutoff = [10, 100], args.repeats or 2, 10**9
+        # p=1000 is included so the p==1000 acceptance gates (facade tax,
+        # jax-vs-bank steady state) actually run in the CI smoke, not just
+        # in full sweeps.  The scalar column is skipped above p=100 to keep
+        # the smoke fast; the gates don't need it.
+        ps, repeats, cutoff = [10, 100, 1000], args.repeats or 2, 100
+        f32_at = -1  # drift quantification is a full-sweep (p=10k) question
     else:
         ps, repeats, cutoff = [10, 100, 1000, 10000], args.repeats or 3, 10**9
+        f32_at = ps[-1]
 
-    rows = run_sweep(ps, repeats, args.backend, scalar_cutoff=cutoff)
+    rows = run_sweep(ps, repeats, args.backend, scalar_cutoff=cutoff, f32_at=f32_at)
     payload = {
         "benchmark": "partition_scale",
         "description": (
-            "partition_units latency: seed scalar path vs numpy ModelBank "
-            "vs jitted JaxModelBank (x64; steady-state = post-compile)"
+            "partition_units latency via the SpeedStore/Scheduler facade: "
+            "seed scalar path vs numpy ModelBank vs jitted JaxModelBank "
+            "(x64; steady-state = post-compile; facade_* columns measure the "
+            "facade's validation+dispatch tax over the raw kernels; "
+            "jax_f32_* columns quantify float32 drift at the largest p)"
         ),
         "units_per_proc": 100,
         "repeats": repeats,
@@ -163,6 +261,20 @@ def main(argv=None) -> int:
     if any(r["max_unit_diff"] > 1 for r in checked):
         print("WARNING: scalar/bank paths disagree by >1 unit")
         rc = 1
+    # Facade tax gate at the paper-scale fleet (p=1000, the same anchor as
+    # the jax-vs-bank gate below): the unified API must cost <= 5% over the
+    # raw kernel.  Other p are latency-noise dominated on shared runners
+    # (the real tax is an O(p) validation pass, ~60us at p=1000) and are
+    # reported informationally.
+    over = [r for r in rows if r["p"] == 1000 and r["facade_overhead_pct"] > 5.0]
+    if over:
+        print("FAIL: facade overhead > 5% at p=1000:",
+              [(r["p"], round(r["facade_overhead_pct"], 2)) for r in over])
+        rc = 1
+    for r in rows:
+        if r["p"] > 1000 and r["facade_overhead_pct"] > 5.0:
+            print(f"note: facade overhead {r['facade_overhead_pct']:.2f}% at "
+                  f"p={r['p']} (informational; shared-runner noise floor)")
     jaxed = [r for r in rows if "jax_max_unit_diff" in r]
     if jaxed:
         import jax

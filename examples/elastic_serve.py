@@ -1,9 +1,11 @@
 """DFPA-balanced serving dispatch + elastic replica membership.
 
 A fleet of heterogeneous serving replicas (nonlinear throughput vs load:
-the FPM of serving).  DFPA splits request chunks; a replica joins mid-run
-and the dispatcher warm-rebalances.  Also runs a REAL greedy generation on
-the smoke model to show the engine behind each replica.
+the FPM of serving).  The dispatcher's ``Scheduler`` session splits request
+chunks via DFPA; a replica then joins mid-run (``join``) and the warm
+session rebalances from the surviving estimates — no cold restart.  Also
+runs a REAL greedy generation on the smoke model to show the engine behind
+each replica.
 
     PYTHONPATH=src python examples/elastic_serve.py
 """
@@ -14,8 +16,6 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core import imbalance
 from repro.nn.params import init_tree
-from repro.runtime.elastic import elastic_rebalance
-from repro.runtime.balance import BalanceController
 from repro.runtime.serve_loop import ReplicaDispatcher, ServeEngine
 from repro.runtime.train_loop import model_spec_for
 
@@ -42,14 +42,14 @@ def replica_run(i, x):
 
 disp = ReplicaDispatcher(replica_run, 4, eps=0.1)
 res = disp.balance(96)
-print(f"\n4 replicas: d={res.d} iters={res.iterations} imb={res.imbalance:.3f}")
+print(f"\n4 replicas: d={res.allocations} iters={res.iterations} imb={res.imbalance:.3f}")
 
 # --- 3. elastic join: replica 5 arrives; warm rebalance ---------------------
-ctrl = BalanceController(n_units=96, num_groups=4, eps=0.1, models=res.models, d=list(res.d))
-ctrl5 = elastic_rebalance(ctrl, surviving=[0, 1, 2, 3], joined=1)
+sched = disp.scheduler  # the warm session autotune left behind
+sched.join(1)
 for _ in range(6):
-    times = [replica_run(i, d) for i, d in enumerate(ctrl5.d)]
-    ctrl5.observe(times)
-times = [replica_run(i, d) for i, d in enumerate(ctrl5.d)]
-print(f"after join: d={ctrl5.d} imb={imbalance([t for t in times if t > 0]):.3f}")
+    times = [replica_run(i, d) for i, d in enumerate(sched.d)]
+    sched.observe(times)
+times = [replica_run(i, d) for i, d in enumerate(sched.d)]
+print(f"after join: d={sched.d} imb={imbalance([t for t in times if t > 0]):.3f}")
 print("the newcomer was folded in from a donor estimate — no cold restart.")

@@ -3,18 +3,21 @@ detection + an elastic group loss — the framework's production story in
 miniature (real jit'd training steps; group heterogeneity emulated by
 deterministic per-group slowdowns).
 
+One ``Scheduler`` session is the whole control plane: ``observe`` folds
+step times into the models and repartitions past ``eps``,
+``straggler_actions`` flags and reprofiles unhealthy groups, and ``leave``
+handles the elastic departure with a warm re-partition.
+
     PYTHONPATH=src python examples/hetero_train.py
 """
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import Scheduler
 from repro.data import SyntheticLMData, UnitBatcher
 from repro.optim.schedule import warmup_cosine
-from repro.runtime.balance import BalanceController
-from repro.runtime.elastic import elastic_rebalance
 from repro.runtime.straggler import StragglerAction, StragglerDetector
 from repro.runtime.train_loop import init_train_state, make_train_step
 
@@ -26,14 +29,16 @@ state = init_train_state(CFG, jax.random.PRNGKey(0))
 sched = warmup_cosine(3e-3, 2, STEPS)
 data = SyntheticLMData(CFG, batch=2, seq=32)
 batcher = UnitBatcher(data, micro_batch=2)
-ctrl = BalanceController(n_units=UNITS, num_groups=GROUPS, eps=0.15, smooth=1.0)
-det = StragglerDetector(factor=1.6, patience=2, patience_hard=5)
+ctrl = Scheduler(
+    n_units=UNITS, num_groups=GROUPS, eps=0.15, min_units=1, smooth=1.0,
+    detector=StragglerDetector(factor=1.6, patience=2, patience_hard=5),
+)
 step_fns = {}
 
 print(f"groups={GROUPS} hetero={HETERO} units/step={UNITS}")
 for step in range(STEPS):
     if step == 9:  # elastic event: group 3 (slowest) leaves the fleet
-        ctrl = elastic_rebalance(ctrl, surviving=[0, 1, 2])
+        ctrl.leave(3)
         HETERO = HETERO[:3]
         print(">>> elastic: group 3 left; warm-started DFPA re-partition")
     units = batcher.global_step_units(ctrl.n_units, step)
@@ -51,12 +56,10 @@ for step in range(STEPS):
         times.append(a * 0.01 * HETERO[g])  # emulated wall time
         if g == 0:
             state, loss = new_state, float(metrics["loss"])
-    for g in range(ctrl.num_groups):
-        act = det.update(g, ctrl.models[g], ctrl.d[g], times[g])
+    acts = ctrl.straggler_actions(times)  # REPROFILE applied automatically
+    for g, act in enumerate(acts):
         if act is not StragglerAction.NONE:
             print(f"    straggler[{g}]: {act.value}")
-            if act is StragglerAction.REPROFILE:
-                det.reprofile(ctrl, g)
     changed = ctrl.observe(times)
     print(
         f"step {step:2d} loss {loss:7.4f} d={ctrl.d}"

@@ -1,18 +1,18 @@
 """2-D heterogeneous matmul partitioning (paper §3.2), end to end.
 
-Compares the three applications of Fig. 10 on a 4x4 processor grid:
+Compares the three applications of Fig. 10 on a 4x4 processor grid —
 CPM (constant models), FFMPA (pre-built full models), and DFPA
-(dynamically built partial models).
+(dynamically built partial models) — all through the ``Scheduler`` facade:
+the same ``partition_grid(M, N)`` call, three policies.
 
     PYTHONPATH=src python examples/matmul_2d_dfpa.py
 """
 
 from repro.core import (
     HCL_SPECS,
+    Policy,
+    Scheduler,
     app_time_2d,
-    cpm_partition_2d,
-    dfpa_partition_2d,
-    ffmpa_partition_2d,
     speed_fn_2d,
 )
 
@@ -20,19 +20,19 @@ P, Q, M, N = 4, 4, 512, 512
 specs = HCL_SPECS[: P * Q]
 grid = [[speed_fn_2d(specs[i * Q + j]) for j in range(Q)] for i in range(P)]
 
-cpm, cpm_cost = cpm_partition_2d(grid, M, N)
-ff = ffmpa_partition_2d(grid, M, N, eps=0.1)
-df = dfpa_partition_2d(grid, M, N, eps=0.1)
+cpm = Scheduler(grid=grid, policy=Policy.CPM).partition_grid(M, N)
+ff = Scheduler(grid=grid, policy=Policy.FFMPA).partition_grid(M, N, eps=0.1, max_outer=50)
+df = Scheduler(grid=grid, policy=Policy.GRID2D).partition_grid(M, N, eps=0.1)
 
-t_cpm = app_time_2d(grid, cpm, K=N) + cpm_cost
+t_cpm = app_time_2d(grid, cpm, K=N) + cpm.diagnostics["bench_cost"]
 t_ff = app_time_2d(grid, ff, K=N)
-t_df = app_time_2d(grid, df, K=N) + df.bench_cost
+t_df = app_time_2d(grid, df, K=N) + df.diagnostics["bench_cost"]
 
 print(f"grid {P}x{Q}, matrix {M}x{N} (block units)")
 print(f"CPM   : {t_cpm:8.2f}s   (1 benchmark round; misestimates paging nodes)")
 print(f"FFMPA : {t_ff:8.2f}s   (needs pre-built full models: expensive offline)")
-print(f"DFPA  : {t_df:8.2f}s   ({df.total_rounds} online rounds, "
-      f"{df.bench_cost:.2f}s partitioning)")
+print(f"DFPA  : {t_df:8.2f}s   ({df.diagnostics['total_rounds']} online rounds, "
+      f"{df.diagnostics['bench_cost']:.2f}s partitioning)")
 print(f"\nDFPA column widths: {df.col_widths}")
 for j in range(Q):
     print(f"  column {j}: rows {df.row_heights[j]}")

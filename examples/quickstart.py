@@ -1,16 +1,18 @@
-"""Quickstart: the paper's DFPA in 30 lines.
+"""Quickstart: the paper's DFPA through the Scheduler facade, in 30 lines.
 
 An application lands on an UNKNOWN heterogeneous cluster (here: the
-calibrated HCL simulator).  DFPA balances the workload online, without any
-pre-built performance model, in a handful of rounds.
+calibrated HCL simulator).  One ``Scheduler`` session balances the workload
+online, without any pre-built performance model, in a handful of rounds —
+``autotune`` runs the paper's measurement loop and returns a typed
+``Partition``; the warm session stays ready for ``observe``/``join``/
+``leave``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 from repro.core import (
+    Scheduler,
     SimulatedExecutor,
-    dfpa,
-    imbalance,
     make_hcl_time_fns,
     matmul_app_time_1d,
 )
@@ -22,14 +24,15 @@ specs, time_fns = make_hcl_time_fns(N)
 row_fns = [(lambda tf: lambda rows: tf(rows * N))(tf) for tf in time_fns]
 
 executor = SimulatedExecutor(time_fns=row_fns)
-result = dfpa(executor, N, EPS, min_units=1)
+sched = Scheduler()  # DFPA policy, numpy backend — resolved once, here
+result = sched.autotune(executor, N, EPS, min_units=1)
 
 print(f"processors        : {len(specs)} ({specs[0].name}..{specs[-1].name})")
 print(f"converged         : {result.converged} in {result.iterations} rounds")
 print(f"final imbalance   : {result.imbalance:.3f} (eps={EPS})")
-print(f"distribution      : min={min(result.d)} max={max(result.d)} rows")
-print(f"model points used : max {max(result.points_per_proc)} per processor")
+print(f"distribution      : min={min(result.allocations)} max={max(result.allocations)} rows")
+print(f"model points used : max {max(m.num_points for m in sched.models)} per processor")
 print(f"DFPA cost         : {executor.total_cost:.2f}s")
-print(f"matmul app time   : {matmul_app_time_1d(time_fns, result.d, N):.1f}s")
+print(f"matmul app time   : {matmul_app_time_1d(time_fns, result.allocations, N):.1f}s")
 print("=> partitioning cost is orders of magnitude below the app time,")
 print("   with no pre-built performance model — the paper's headline claim.")

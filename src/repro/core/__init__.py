@@ -35,9 +35,19 @@ A third, on-device representation — ``JaxModelBank`` (``modelbank_jax.py``,
 selected with ``backend="jax"``) — runs the whole ``t*`` bisection and the
 greedy integer completion under ``jax.jit``; it is exported lazily so the
 numpy paths never import jax.
+
+The recommended entry point is the **Scheduler facade** (``scheduler.py``):
+one session object over a ``SpeedStore`` (``speedstore.py``, backend resolved
+once at construction) exposing the full paper lifecycle — ``partition`` /
+``observe`` / ``repartition`` / ``autotune`` / ``partition_grid`` /
+``join``/``leave`` / ``straggler_actions`` / ``state_dict``.  The free
+functions below (``partition_units``, ``dfpa``, ``dfpa_partition_2d``, …)
+are deprecation shims that delegate to it.
 """
 
 from .dfpa import DFPAResult, dfpa
+from .scheduler import Partition, Policy, Scheduler
+from .speedstore import SpeedStore, sample_analytic_points
 from .executor import (
     BatchedSimulatedExecutor,
     CallableExecutor,
@@ -98,10 +108,15 @@ __all__ = [
     "JaxModelBank",
     "ModelBank",
     "NodeSpec",
+    "Partition",
     "PiecewiseLinearFPM",
+    "Policy",
     "RoundLog",
+    "Scheduler",
     "SimulatedExecutor",
     "SpeedModel",
+    "SpeedStore",
+    "sample_analytic_points",
     "app_time_2d",
     "bank_repartition_2d",
     "cpm_partition",

@@ -10,6 +10,16 @@ speed functions are *unknown a priori*, to relative accuracy ``eps``:
      see ``partition.py``), execute the new distribution, measure;
   5. accumulate the new points into the estimates; goto 4.
 
+.. deprecated::
+    The loop now lives on the facade — :meth:`repro.core.scheduler.Scheduler.
+    autotune` — where the model estimates are a :class:`SpeedStore` (backend
+    resolved once, device carry maintained by ``fold_in``) and the result is
+    a typed ``Partition``.  :func:`dfpa` remains as a thin shim: it emits
+    ``DeprecationWarning``, delegates to ``Scheduler.autotune`` and repacks
+    the ``Partition`` into the legacy :class:`DFPAResult`, preserving the
+    exact round-by-round behaviour (the golden-trace suite holds it to
+    that).
+
 Extras beyond the bare paper loop (all flagged, all default-compatible):
 
 * ``warm_models`` — start from surviving FPM estimates instead of the even
@@ -20,28 +30,21 @@ Extras beyond the bare paper loop (all flagged, all default-compatible):
   so when the partitioner repeats itself short of eps, DFPA probes a 1-unit
   perturbation (slowest processor donates to the fastest) — the new point
   sharpens the piecewise-linear estimate exactly around the operating point
-  and re-launches progress.  (The paper's real cluster gets fresh
-  information from every repeat via measurement noise; the probe recovers
-  the same effect deterministically.)  If no unseen neighbour exists, DFPA
-  stops and reports the best measured round;
+  and re-launches progress;
 * ``min_units`` — keep every processor participating (the matrix apps do);
 * ``backend="jax"`` — the FPM estimates additionally live on device as a
-  ``JaxModelBank`` *carry*: every round's observations are folded in with one
-  vectorized sorted insert (``fold_in``) instead of rebuilding the padded
-  arrays from the ``p`` scalar models, and every re-partition runs the jitted
-  device bisection.  The scalar estimates are still maintained (they are the
-  ``DFPAResult.models`` contract); what the carry eliminates is the
-  ``O(p*k)`` host rebuild per re-partition.
+  ``JaxModelBank`` *carry*: every round's observations are folded in with
+  one vectorized sorted insert instead of rebuilding the padded arrays, and
+  every re-partition runs the jitted device bisection.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .executor import Executor
-from .fpm import PiecewiseLinearFPM, imbalance
-from .partition import partition_units
+from .fpm import PiecewiseLinearFPM
 
 __all__ = ["DFPAResult", "dfpa"]
 
@@ -61,11 +64,6 @@ class DFPAResult:
         return [m.num_points for m in self.models]
 
 
-def _even(n: int, p: int) -> List[int]:
-    base, rem = divmod(n, p)
-    return [base + (1 if i < rem else 0) for i in range(p)]
-
-
 def dfpa(
     executor: Executor,
     n: int,
@@ -79,125 +77,37 @@ def dfpa(
     probe_budget: Optional[int] = None,
     backend: str = "numpy",
 ) -> DFPAResult:
-    """Run DFPA over ``executor``; see module docstring."""
-    p = executor.num_procs
-    if p < 1:
-        raise ValueError("need at least one processor")
-    if n < p:
-        raise ValueError(f"DFPA requires n >= p (n={n}, p={p})")
-    if eps <= 0:
-        raise ValueError("eps must be positive")
+    """Run DFPA over ``executor``.
+
+    .. deprecated:: use ``Scheduler.autotune`` (see module docstring).
+    """
+    from .scheduler import Policy, Scheduler
+    from .speedstore import SpeedStore, _warn_legacy
+
+    _warn_legacy("dfpa()", "Scheduler.autotune()")
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown backend {backend!r}")
-
-    models: List[PiecewiseLinearFPM] = (
-        [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm_models]
-        if warm_models is not None
-        else [PiecewiseLinearFPM() for _ in range(p)]
-    )
-
-    # Device-resident model carry: built once, then updated in place by the
-    # vectorized fold-in — the re-partition never rebuilds it from scalars.
-    carry = None
-    if backend == "jax":
-        from .modelbank_jax import JaxModelBank
-
-        carry = (
-            JaxModelBank.from_models(models)
-            if any(m.num_points > 0 for m in models)
-            else JaxModelBank.empty(p)
+    p = executor.num_procs
+    store = (
+        SpeedStore.from_models(
+            [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm_models],
+            backend=backend,
         )
-
-    history: List[Tuple[List[int], List[float]]] = []
-    seen: Dict[Tuple[int, ...], List[float]] = {}
-    if probe_budget is None:
-        probe_budget = 2 * p
-    probes_left = probe_budget
-
-    def measure(d: List[int]) -> List[float]:
-        nonlocal carry
-        times = executor.run(d)
-        history.append((list(d), list(times)))
-        seen[tuple(d)] = list(times)
-        for i, (di, ti) in enumerate(zip(d, times)):
-            if di > 0 and ti > 0:
-                models[i].add_point(float(di), di / ti)  # s_i(d_i) = d_i / t_i
-        if carry is not None:
-            darr = [float(di) for di in d]
-            sarr = [di / ti if (di > 0 and ti > 0) else 1.0 for di, ti in zip(d, times)]
-            valid = [di > 0 and ti > 0 for di, ti in zip(d, times)]
-            carry = carry.fold_in(darr, sarr, valid)
-        return list(times)
-
-    def repartition() -> List[int]:
-        src = carry if carry is not None else models
-        return partition_units(src, n, caps, min_units=min_units, backend=backend)
-
-    # Step 1: initial distribution — even split (paper), or the warm-start
-    # partition when prior estimates exist (elastic restart path).
-    if warm_start_d is not None:
-        d = list(map(int, warm_start_d))
-        if sum(d) != n or len(d) != p:
-            raise ValueError("warm_start_d must be a length-p partition of n")
-    elif warm_models is not None and all(m.num_points > 0 for m in models):
-        d = repartition()
-    else:
-        d = _even(n, p)
-    times = measure(d)
-    it = 1
-
-    best_d, best_t, best_imb = list(d), list(times), imbalance(times)
-
-    while True:
-        imb = imbalance(times)
-        if imb < best_imb:
-            best_d, best_t, best_imb = list(d), list(times), imb
-        if imb <= eps:
-            return DFPAResult(list(d), list(times), it, True, imb, models, history)
-        if it >= max_iter:
-            return DFPAResult(best_d, best_t, it, False, best_imb, models, history)
-        # Steps 3+5: models already updated inside measure() (and folded into
-        # the device carry on the jax backend); step 4: re-partition
-        # (partition_units banks the piecewise estimates itself — one array
-        # op per bisection step instead of p Python calls).
-        d_new = repartition()
-        if tuple(d_new) in seen:
-            t_seen = seen[tuple(d_new)]
-            imb_seen = imbalance(t_seen)
-            if imb_seen < best_imb:
-                best_d, best_t, best_imb = list(d_new), list(t_seen), imb_seen
-            probe = (
-                _probe_neighbour(d_new, t_seen, seen, caps, min_units)
-                if probes_left > 0
-                else None
-            )
-            if probe is None:
-                return DFPAResult(
-                    best_d, best_t, it, best_imb <= eps, best_imb, models, history
-                )
-            probes_left -= 1
-            d_new = probe
-        d = d_new
-        times = measure(d)
-        it += 1
-
-
-def _probe_neighbour(d, times, seen, caps, min_units):
-    """First unseen 1-unit transfer from slower to faster processors."""
-    p = len(d)
-    order_slow = sorted(range(p), key=lambda i: times[i], reverse=True)
-    order_fast = sorted(range(p), key=lambda i: times[i])
-    for i in order_slow:
-        if d[i] - 1 < min_units:
-            continue
-        for j in order_fast:
-            if i == j:
-                continue
-            if caps is not None and d[j] + 1 > caps[j]:
-                continue
-            cand = list(d)
-            cand[i] -= 1
-            cand[j] += 1
-            if tuple(cand) not in seen:
-                return cand
-    return None
+        if warm_models is not None
+        else SpeedStore.empty(max(p, 1), backend=backend)
+    )
+    sched = Scheduler(store, policy=Policy.DFPA, backend=backend)
+    part = sched.autotune(
+        executor, n, eps,
+        max_iter=max_iter, caps=caps, min_units=min_units,
+        warm_start_d=warm_start_d, probe_budget=probe_budget,
+    )
+    return DFPAResult(
+        d=list(part.allocations),
+        times=list(part.times),
+        iterations=part.iterations,
+        converged=part.converged,
+        imbalance=part.imbalance,
+        models=part.diagnostics["models"],
+        history=part.diagnostics["history"],
+    )

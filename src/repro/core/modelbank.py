@@ -65,6 +65,42 @@ All three raise the same ``ValueError`` s on infeasible inputs (``sum(caps)
 positive caps), and all three produce allocations that sum exactly to ``n``
 with identical makespans (tie-breaks may place a leftover unit differently
 only between the scalar and banked continuous solvers' float paths).
+
+Migration: free functions → Scheduler
+-------------------------------------
+
+The backend used to be chosen per call (``vectorize=`` / ``backend=``
+kwargs, re-derived by ``_as_bank``-style dispatch helpers at every entry
+point).  It is now chosen ONCE, at ``SpeedStore`` construction, and the
+lifecycle lives on the ``Scheduler`` facade (``core/scheduler.py``).  The
+old entry points still work but emit ``DeprecationWarning`` and delegate:
+
+======================================================  =====================================================
+legacy                                                  facade
+======================================================  =====================================================
+``partition_units(models, n, backend="jax")``           ``SpeedStore.from_models(models, backend="jax")``
+                                                        ``    .partition_units(n)``
+``partition_units(models, n, vectorize=False)``         ``SpeedStore.from_models(models, backend="scalar")``
+``partition_continuous(models, n)``                     ``store.partition_continuous(n)``
+``cpm_partition(speeds, n)``                            ``Scheduler.from_speeds(speeds).partition(n)``
+``dfpa(executor, n, eps, ...)``                         ``Scheduler().autotune(executor, n, eps, ...)``
+``dfpa_partition_2d(grid, M, N, eps)``                  ``Scheduler(grid=grid, policy=Policy.GRID2D)``
+                                                        ``    .partition_grid(M, N, eps=eps)``
+``cpm_partition_2d`` / ``ffmpa_partition_2d``           same, with ``policy=Policy.CPM`` / ``Policy.FFMPA``
+``bank_repartition_2d(fpms, widths, M)``                ``Scheduler(...).repartition_grid(...)``
+``BalanceController(...).observe(times)``               ``Scheduler(n_units=..., num_groups=...)``
+                                                        ``    .observe(times)``
+``elastic_rebalance(ctrl, surviving, joined)``          ``sched.resize(...)`` / ``sched.join()`` /
+                                                        ``sched.leave(g)``
+``StragglerDetector`` wiring + ``det.reprofile``        ``sched.straggler_actions(times)`` (auto-reprofiles)
+``ctrl.state_dict()`` (lost backend/smooth)             ``sched.state_dict()`` (full config round-trips)
+======================================================  =====================================================
+
+Results are a typed ``Partition`` (allocations, ``t_star``, makespan,
+imbalance, convergence, per-group diagnostics) instead of bare lists /
+``DFPAResult`` / ``Grid2DResult``.  ``AnalyticModel`` consumers that want
+the banked paths can sample-and-bank via
+``SpeedStore.from_models(..., analytic_tol=..., analytic_hi=n)``.
 """
 
 from __future__ import annotations

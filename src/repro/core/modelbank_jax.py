@@ -270,7 +270,7 @@ def _partition_units_jit(xs, ss, counts, caps_i, n, min_units, rel_tol, max_step
     it = caps_i.dtype
     n_f = jnp.asarray(n, dt)
     caps_f = jnp.minimum(caps_i.astype(dt), n_f[..., None])  # continuous clip
-    alloc, _ = _partition_continuous_jit(xs, ss, counts, caps_f, n_f, rel_tol, max_steps)
+    alloc, t_star = _partition_continuous_jit(xs, ss, counts, caps_f, n_f, rel_tol, max_steps)
 
     d = jnp.maximum(jnp.asarray(min_units, it), jnp.floor(alloc).astype(it))
     d = jnp.minimum(d, caps_i)
@@ -319,7 +319,7 @@ def _partition_units_jit(xs, ss, counts, caps_i, n, min_units, rel_tol, max_step
         ok = ok.reshape(batch)
     else:
         d, ok = _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover)
-    return d, ok
+    return d, ok, t_star
 
 
 @partial(jax.jit, donate_argnums=_DONATE)
@@ -554,13 +554,16 @@ class JaxModelBank:
         )
 
     def partition_units(
-        self, n, caps=None, *, min_units: int = 0, max_steps: int = 200
+        self, n, caps=None, *, min_units: int = 0, max_steps: int = 200,
+        with_t: bool = False,
     ) -> np.ndarray:
         """Integer partition on device; host-side feasibility checks raise
         the same ``ValueError`` s as the scalar and numpy-bank paths.
 
         ``n`` is a scalar (or ``[q]`` for a stacked bank, partitioning every
-        column simultaneously).  Returns the host ``int`` allocation array.
+        column simultaneously).  Returns the host ``int`` allocation array;
+        with ``with_t=True`` returns ``(allocations, t_star)`` — the inner
+        continuous solve's equal-time point, at zero extra device work.
         """
         shape = self.counts.shape
         p = shape[-1]
@@ -593,7 +596,7 @@ class JaxModelBank:
                 f"< n={float(np.reshape(n_host, (-1,))[i])}"
             )
         self._check_feasible(caps_host.astype(np.float64), n)
-        d, ok = _partition_units_jit(
+        d, ok, t_star = _partition_units_jit(
             self.xs, self.ss, self.counts,
             jnp.asarray(caps_host, idtype),
             jnp.asarray(n_host),
@@ -603,6 +606,8 @@ class JaxModelBank:
         )
         if not bool(np.all(np.asarray(ok))):
             raise ValueError("caps infeasible during integer completion")
+        if with_t:
+            return np.asarray(d), np.asarray(t_star)
         return np.asarray(d)
 
     # -- device-resident observation fold-in ---------------------------------

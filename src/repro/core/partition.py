@@ -18,25 +18,33 @@ Implements the building blocks the paper composes:
 * ``cpm_partition`` — the conventional constant-performance-model distribution
   (speed constants, proportional allocation), the paper's baseline.
 
+.. deprecated::
+    The module-level functions are **legacy shims**: the scalar-vs-bank-vs-jax
+    dispatch they used to re-derive per call now happens ONCE, at
+    ``SpeedStore`` construction (``core/speedstore.py``), and the lifecycle
+    around them (observe → repartition → adapt) lives on the ``Scheduler``
+    facade (``core/scheduler.py``).  They emit ``DeprecationWarning`` and
+    delegate; new code should build a ``SpeedStore`` (or ``Scheduler``) and
+    call its methods.  The private ``_partition_*`` kernels below remain the
+    single implementation all paths share — the facade calls them with the
+    backend pre-resolved.
+
 Three execution paths share identical semantics (see the "three backends,
 one semantics" section in ``modelbank.py``):
 
-* **bank path** (default, ``backend="numpy"``) — the models are adapted into
+* **bank path** (default, backend ``"numpy"``) — the models are adapted into
   a ``ModelBank`` and every bisection step evaluates all ``p`` processors'
   segment inequalities in ONE numpy pass; the integer completion uses a lazy
   heap.  This is the fleet-scale host path: thousands of processors partition
   in sub-millisecond time (``benchmarks/partition_scale.py``).
-* **jax path** (``backend="jax"``) — the bank lives on device as a
+* **jax path** (backend ``"jax"``) — the bank lives on device as a
   ``JaxModelBank`` and the whole ``t*`` bisection + integer completion runs
   under ``jax.jit`` (``modelbank_jax.py``); after the one-time compile a
   repartition costs microseconds and composes with a jitted training step.
   With x64 enabled its allocations are bit-identical to the numpy bank.
 * **scalar path** — the original per-model Python loop, used automatically
   when a model has no piecewise representation (``AnalyticModel``) or when
-  ``vectorize=False`` is forced (the scaling benchmark's baseline).
-
-Both functions also accept a ``ModelBank`` (or ``JaxModelBank``) directly in
-place of the model sequence.
+  the scalar backend is forced (the scaling benchmark's baseline).
 """
 
 from __future__ import annotations
@@ -47,7 +55,7 @@ from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .fpm import ConstantModel, SpeedModel
+from .fpm import SpeedModel
 from .modelbank import ModelBank
 
 __all__ = [
@@ -59,84 +67,77 @@ __all__ = [
 Models = Union[Sequence[SpeedModel], ModelBank]
 
 
-def _as_bank(models: Models) -> Optional[ModelBank]:
-    if isinstance(models, ModelBank):
-        return models
-    if getattr(models, "is_jax", False):
-        return models.to_bank()
-    try:
-        return ModelBank.from_models(models)
-    except TypeError:
-        return None
-
-
-def _as_jax_bank(models: Models):
-    """Adapt to a device bank, or ``None`` for non-piecewise models (scalar
-    fallback).  Imported lazily so the numpy paths never pay for jax."""
-    from .modelbank_jax import JaxModelBank
-
-    if getattr(models, "is_jax", False):
-        if models.xs.ndim != 2:
-            raise ValueError(
-                "stacked [q, p, k] banks don't fit the flat List[int] "
-                "contract; use JaxModelBank.partition_units / "
-                "bank_repartition_2d for batched partitions"
-            )
-        return models
-    if isinstance(models, ModelBank):
-        return JaxModelBank.from_bank(models)
-    try:
-        return JaxModelBank.from_models(models)
-    except TypeError:
-        return None
+# ---------------------------------------------------------------------------
+# Internal kernels — the single implementation behind SpeedStore and the
+# legacy shims.  Validation mirrors the seed public functions exactly so the
+# facade raises the same ValueErrors in the same order.
+# ---------------------------------------------------------------------------
 
 
 def _total_alloc(models: Sequence[SpeedModel], t: float, caps: Sequence[float]) -> float:
     return sum(m.alloc_at_time(t, c) for m, c in zip(models, caps))
 
 
-def partition_continuous(
-    models: Models,
+def _prep_continuous_caps(p: int, n: float, caps: Optional[Sequence[float]]) -> List[float]:
+    """Cap normalization + feasibility check shared by every backend."""
+    caps = list(caps) if caps is not None else [float(n)] * p
+    caps = [min(float(c), float(n)) for c in caps]
+    if sum(caps) < n:
+        raise ValueError(f"infeasible: sum(caps)={sum(caps)} < n={n}")
+    return caps
+
+
+def _continuous_scalar(
+    models: Sequence[SpeedModel],
     n: float,
     caps: Optional[Sequence[float]] = None,
     *,
     rel_tol: float = 1e-12,
     max_steps: int = 200,
-    vectorize: bool = True,
-    backend: str = "numpy",
 ) -> Tuple[List[float], float]:
-    """Continuous optimal partition of ``n`` units across ``models``.
-
-    Returns ``(allocations, t_star)``.  ``caps`` bounds per-processor
-    allocation (memory limits); infeasible caps raise ``ValueError``.
-    ``backend="jax"`` runs the bisection jitted on device (non-piecewise
-    models still fall back to the scalar host loop).
-    """
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}")
     p = len(models)
     if p == 0:
         raise ValueError("no processors")
     if n <= 0:
         return [0.0] * p, 0.0
-    caps = list(caps) if caps is not None else [float(n)] * p
-    caps = [min(float(c), float(n)) for c in caps]
-    if sum(caps) < n:
-        raise ValueError(f"infeasible: sum(caps)={sum(caps)} < n={n}")
-
-    if backend == "jax" and vectorize:
-        jbank = _as_jax_bank(models)
-        if jbank is not None:
-            xs, t_star = jbank.partition_continuous(
-                float(n), caps, rel_tol=rel_tol, max_steps=max_steps
-            )
-            return [float(v) for v in xs], float(t_star)
-    bank = _as_bank(models) if vectorize else None
-    if bank is not None:
-        return _partition_continuous_bank(bank, n, caps, rel_tol=rel_tol, max_steps=max_steps)
-    if isinstance(models, ModelBank):
-        models = models.to_models()
+    caps = _prep_continuous_caps(p, n, caps)
     return _partition_continuous_scalar(models, n, caps, rel_tol=rel_tol, max_steps=max_steps)
+
+
+def _continuous_bank(
+    bank: ModelBank,
+    n: float,
+    caps: Optional[Sequence[float]] = None,
+    *,
+    rel_tol: float = 1e-12,
+    max_steps: int = 200,
+) -> Tuple[List[float], float]:
+    p = len(bank)
+    if p == 0:
+        raise ValueError("no processors")
+    if n <= 0:
+        return [0.0] * p, 0.0
+    caps = _prep_continuous_caps(p, n, caps)
+    return _partition_continuous_bank(bank, n, caps, rel_tol=rel_tol, max_steps=max_steps)
+
+
+def _prep_unit_caps(
+    p: int, n: int, caps: Optional[Sequence[int]], min_units: int
+) -> List[int]:
+    """Integer-partition validation shared by every backend (the silent
+    min_units-shortfall fix: any ``cap < min_units`` refuses loudly)."""
+    if n < 0:
+        raise ValueError("n must be non-negative")
+    if min_units * p > n:
+        raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
+    icaps = [int(c) for c in caps] if caps is not None else [n] * p
+    if min_units > 0:
+        for i, c in enumerate(icaps):
+            if c < min_units:
+                raise ValueError(
+                    f"min_units={min_units} infeasible: caps[{i}]={c} < min_units"
+                )
+    return icaps
 
 
 def _partition_continuous_scalar(
@@ -223,59 +224,12 @@ def _partition_continuous_bank(
     return list(map(float, xs)), t_star
 
 
-def partition_units(
-    models: Models,
-    n: int,
-    caps: Optional[Sequence[int]] = None,
-    *,
-    min_units: int = 0,
-    vectorize: bool = True,
-    backend: str = "numpy",
-) -> List[int]:
-    """Integer partition of ``n`` equal computation units.
-
-    Continuous solution -> floor -> greedy min-makespan completion.  With
-    ``min_units > 0`` every processor receives at least that many units
-    (the paper's matrix apps keep every processor participating).
-    ``backend="jax"`` runs the whole thing jitted on device.
-    """
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}")
-    p = len(models)
-    if n < 0:
-        raise ValueError("n must be non-negative")
-    if min_units * p > n:
-        raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
-    icaps = [int(c) for c in caps] if caps is not None else [n] * p
-    if min_units > 0:
-        # A cap below min_units makes {min_units <= d_i <= cap_i} empty; all
-        # three backends must refuse rather than silently hand the shortfall
-        # to the other processors.
-        for i, c in enumerate(icaps):
-            if c < min_units:
-                raise ValueError(
-                    f"min_units={min_units} infeasible: caps[{i}]={c} < min_units"
-                )
-
-    if backend == "jax" and vectorize:
-        jbank = _as_jax_bank(models)
-        if jbank is not None:
-            d = jbank.partition_units(n, icaps, min_units=min_units)
-            return [int(v) for v in d]
-    bank = _as_bank(models) if vectorize else None
-    if bank is not None:
-        return _partition_units_bank(bank, n, icaps, min_units=min_units)
-    if isinstance(models, ModelBank):
-        models = models.to_models()
-    return _partition_units_scalar(models, n, icaps, min_units=min_units)
-
-
 def _partition_units_scalar(
     models: Sequence[SpeedModel], n: int, icaps: List[int], *, min_units: int
-) -> List[int]:
+) -> Tuple[List[int], float]:
     p = len(models)
     fcaps = [float(c) for c in icaps]
-    xs, _ = partition_continuous(models, float(n), fcaps, vectorize=False)
+    xs, t_star = _continuous_scalar(models, float(n), fcaps)
     d = [max(min_units, int(math.floor(x))) for x in xs]
     d = [min(di, ci) for di, ci in zip(d, icaps)]
     leftover = n - sum(d)
@@ -305,12 +259,12 @@ def _partition_units_scalar(
             raise ValueError("caps infeasible during integer completion")
         d[best_i] += 1
     assert sum(d) == n
-    return d
+    return d, t_star
 
 
 def _partition_units_bank(
     bank: ModelBank, n: int, icaps: List[int], *, min_units: int
-) -> List[int]:
+) -> Tuple[List[int], float]:
     """Vectorized floor + lazy-heap greedy completion.
 
     Identical tie-breaking to the scalar loop: each leftover unit goes to the
@@ -318,7 +272,7 @@ def _partition_units_bank(
     """
     p = bank.p
     caps_arr = np.asarray(icaps, dtype=np.int64)
-    xs_list, _ = partition_continuous(bank, float(n), [float(c) for c in icaps])
+    xs_list, t_star = _continuous_bank(bank, float(n), [float(c) for c in icaps])
     xs = np.asarray(xs_list, dtype=np.float64)
     d = np.maximum(min_units, np.floor(xs).astype(np.int64))
     d = np.minimum(d, caps_arr)
@@ -358,10 +312,64 @@ def _partition_units_bank(
             if d[i] + 1 <= caps_arr[i]:
                 heapq.heappush(heap, (bank.time_one(i, float(d[i] + 1)), negrem, i))
     assert int(d.sum()) == n
-    return [int(v) for v in d]
+    return [int(v) for v in d], t_star
+
+
+# ---------------------------------------------------------------------------
+# Legacy shims — delegate to the SpeedStore facade (backend resolved once
+# there), emitting DeprecationWarning at the call site.
+# ---------------------------------------------------------------------------
+
+
+def partition_continuous(
+    models: Models,
+    n: float,
+    caps: Optional[Sequence[float]] = None,
+    *,
+    rel_tol: float = 1e-12,
+    max_steps: int = 200,
+    vectorize: bool = True,
+    backend: str = "numpy",
+) -> Tuple[List[float], float]:
+    """Continuous optimal partition of ``n`` units across ``models``.
+
+    .. deprecated:: use ``SpeedStore.partition_continuous`` (the backend is
+       resolved once at store construction instead of per call).
+    """
+    from .speedstore import SpeedStore, _warn_legacy
+
+    _warn_legacy("partition_continuous()", "SpeedStore.partition_continuous()")
+    store = SpeedStore.resolve(models, backend=backend, vectorize=vectorize)
+    return store.partition_continuous(n, caps, rel_tol=rel_tol, max_steps=max_steps)
+
+
+def partition_units(
+    models: Models,
+    n: int,
+    caps: Optional[Sequence[int]] = None,
+    *,
+    min_units: int = 0,
+    vectorize: bool = True,
+    backend: str = "numpy",
+) -> List[int]:
+    """Integer partition of ``n`` equal computation units.
+
+    .. deprecated:: use ``SpeedStore.partition_units`` / ``Scheduler.partition``
+       (the backend is resolved once at store construction instead of per call).
+    """
+    from .speedstore import SpeedStore, _warn_legacy
+
+    _warn_legacy("partition_units()", "SpeedStore.partition_units()")
+    store = SpeedStore.resolve(models, backend=backend, vectorize=vectorize)
+    return store.partition_units(n, caps, min_units=min_units)
 
 
 def cpm_partition(speeds: Sequence[float], n: int, caps: Optional[Sequence[int]] = None) -> List[int]:
-    """Conventional CPM distribution: proportional to constant speeds."""
-    models = [ConstantModel(s) for s in speeds]
-    return partition_units(models, n, caps)
+    """Conventional CPM distribution: proportional to constant speeds.
+
+    .. deprecated:: use ``Scheduler.from_speeds(speeds).partition(n)``.
+    """
+    from .speedstore import SpeedStore, _warn_legacy
+
+    _warn_legacy("cpm_partition()", "Scheduler.from_speeds(...).partition()")
+    return SpeedStore.from_speeds(speeds).partition_units(n, caps)

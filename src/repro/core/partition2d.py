@@ -11,17 +11,17 @@ heights ``m_ij`` (inner).  The paper's DFPA-based algorithm:
      ``n_j ∝ sum_i s_ij(m_ij, n_j)`` (column width proportional to the
      column's speed sum) and goto 2.
 
-Implementation includes the paper's cost optimizations (§3.2 last page):
-  * reuse all previous benchmark points (rescaled to the new column width);
-  * skip re-partitioning a column whose width changed by < ``width_tol``;
-  * warm-start each inner DFPA from the previous iteration's row heights.
+.. deprecated::
+    The algorithms now live on the facade — construct
+    ``Scheduler(grid=grid, policy=Policy.GRID2D | CPM | FFMPA)`` and call
+    ``partition_grid(M, N)`` (or ``repartition_grid`` for the batched
+    no-benchmark refresh).  The functions below are thin shims: they emit
+    ``DeprecationWarning``, delegate to the facade and repack the typed
+    ``Partition`` into the legacy :class:`Grid2DResult`.
 
-``backend="jax"`` forwards to the inner DFPA loops (their re-partitions run
-jitted on device), and :func:`bank_repartition_2d` exposes the fully batched
-variant: all ``q`` columns' model banks stacked into one ``[q, p, k]`` tensor
-whose ``t*`` bisections run *simultaneously* in a single jitted call — the
-device-side refresh used when widths move but no new benchmarks are wanted
-(simulator counterparts: ``speed_fn_2d_batch`` / ``time_fn_2d_batch``).
+This module keeps the result dataclass, the evaluation helper
+:func:`app_time_2d`, and the pure grid helpers the facade's implementation
+shares (`_col_times`, `_rebalance_widths`, `_flat_imbalance`).
 """
 
 from __future__ import annotations
@@ -29,11 +29,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List, Optional, Sequence, Tuple
 
-from .dfpa import dfpa
-from .executor import SimulatedExecutor
-from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
-from .modelbank import ModelBank
-from .partition import cpm_partition, partition_units
+from .fpm import PiecewiseLinearFPM, imbalance
 
 __all__ = [
     "Grid2DResult",
@@ -74,193 +70,6 @@ def _flat_imbalance(times: List[List[float]]) -> float:
     return imbalance([t for col in times for t in col])
 
 
-def bank_repartition_2d(
-    fpms: Sequence[Sequence[PiecewiseLinearFPM]],
-    fpm_width: Sequence[Sequence[Optional[int]]],
-    widths: Sequence[int],
-    M: int,
-    *,
-    min_units: int = 1,
-    backend: str = "numpy",
-) -> List[List[int]]:
-    """Re-partition EVERY column's rows from the surviving FPM estimates in
-    one call — no new benchmarks.
-
-    ``fpms[i][j]`` / ``fpm_width[i][j]`` are the per-(row, column) estimates
-    and the widths they were observed at (the state ``dfpa_partition_2d``
-    maintains); each column's bank is rescaled to its current width (speed in
-    row units ~ 1/width) and, on the jax backend, all ``q`` banks are stacked
-    into one ``[q, p, k]`` tensor whose ``t*`` bisections run simultaneously
-    in a single jitted device call.  ``backend="numpy"`` loops the columns on
-    the host (same allocations).  Returns ``rows[j][i]``.
-    """
-    if backend not in ("numpy", "jax"):
-        raise ValueError(f"unknown backend {backend!r}")
-    p, q = len(fpms), len(widths)
-    for i in range(p):
-        for j in range(q):
-            if fpm_width[i][j] is None or fpms[i][j].num_points == 0:
-                raise ValueError(f"no FPM estimate for processor ({i}, {j})")
-    col_banks = []
-    for j in range(q):
-        bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
-        scale = [fpm_width[i][j] / widths[j] for i in range(p)]
-        col_banks.append(bank.scaled(scale))
-    if backend == "jax":
-        from .modelbank_jax import JaxModelBank
-
-        stacked = JaxModelBank.stack([JaxModelBank.from_bank(b) for b in col_banks])
-        d = stacked.partition_units(M, min_units=min_units)
-        return [[int(v) for v in row] for row in d]
-    return [partition_units(b, M, min_units=min_units) for b in col_banks]
-
-
-def dfpa_partition_2d(
-    grid: Sequence[Sequence[SpeedFn2D]],
-    M: int,
-    N: int,
-    eps: float,
-    *,
-    max_outer: int = 40,
-    inner_max_iter: int = 15,
-    width_tol: float = 0.02,
-    min_units: int = 1,
-    backend: str = "numpy",
-) -> Grid2DResult:
-    """DFPA-based nested 2-D partitioning over ground-truth speeds ``grid``.
-
-    ``grid[i][j]`` is the speed function of processor (i, j) of a p x q grid.
-    """
-    p, q = len(grid), len(grid[0])
-    widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
-    rows: List[Optional[List[int]]] = [None] * q  # warm-start rows per column
-    # FPM estimates per (i, j), in ROW units at the width they were observed;
-    # reused across widths by rescaling rows/s by (old_w / new_w).
-    fpms: List[List[PiecewiseLinearFPM]] = [[PiecewiseLinearFPM() for _ in range(q)] for _ in range(p)]
-    fpm_width: List[List[Optional[int]]] = [[None] * q for _ in range(p)]
-
-    total_rounds = 0
-    bench_cost = 0.0
-    times: List[List[float]] = [[0.0] * p for _ in range(q)]
-    prev_widths: Optional[List[int]] = None
-    best: Optional[Grid2DResult] = None
-
-    for outer in range(1, max_outer + 1):
-        col_round_costs = [0.0] * q
-        for j in range(q):
-            w = widths[j]
-            if (
-                prev_widths is not None
-                and rows[j] is not None
-                and w == prev_widths[j]
-            ):
-                # Paper's optimization: width unchanged -> keep the column's
-                # partition; no re-benchmark needed.
-                times[j] = _col_times(grid, j, widths, rows[j])
-                continue
-            # Rescale surviving FPM points to the new width (g ~ const in w):
-            # one batched speed-scale over the column's model bank.
-            warm = None
-            if all(
-                fpm_width[i][j] is not None and fpms[i][j].num_points > 0
-                for i in range(p)
-            ):
-                col_bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
-                scale = [fpm_width[i][j] / w for i in range(p)]
-                warm = col_bank.scaled(scale).to_models()
-            ex = SimulatedExecutor(
-                time_fns=[
-                    (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
-                    for i in range(p)
-                ]
-            )
-            res = dfpa(
-                ex,
-                M,
-                eps,
-                max_iter=inner_max_iter,
-                min_units=min_units,
-                backend=backend,
-                warm_models=warm,
-                warm_start_d=rows[j] if rows[j] is not None else None,
-                # Probe fixed points only on the COLD first partition of a
-                # column; warm refinements rely on the outer width update
-                # for fresh information — unbounded probing churned 2256
-                # rounds / 76% cost at M=N=768.
-                probe_budget=p if warm is None else 0,
-            )
-            rows[j] = list(res.d)
-            times[j] = list(res.times)
-            for i in range(p):
-                fpms[i][j] = res.models[i]
-                fpm_width[i][j] = w
-            total_rounds += res.iterations
-            col_round_costs[j] = ex.total_cost
-        # Columns run their inner DFPA in parallel -> cost = slowest column.
-        bench_cost += max(col_round_costs) if col_round_costs else 0.0
-
-        imb = _flat_imbalance(times)
-        snap = Grid2DResult(
-            list(widths), [list(r) for r in rows], outer, total_rounds,
-            bench_cost, imb <= eps, imb, [list(t) for t in times],
-        )
-        if best is None or imb < best.imbalance:
-            best = snap
-        if imb <= eps:
-            return snap
-
-        # Outer step (ii): columns' widths ∝ column speed sums (damped).
-        # Paper's freeze optimization: revert sub-tolerance width changes
-        # (skipping their columns' re-benchmark next round) and hand the
-        # residual to the columns that did move.
-        prev_widths = list(widths)
-        widths = _rebalance_widths(widths, times, rows, N)
-        moved = [j for j in range(q) if abs(widths[j] - prev_widths[j]) > width_tol * prev_widths[j]]
-        if moved and len(moved) < q:
-            for j in range(q):
-                if j not in moved:
-                    widths[j] = prev_widths[j]
-            diff = N - sum(widths)
-            k = 0
-            while diff != 0:
-                j = moved[k % len(moved)]
-                step = 1 if diff > 0 else -1
-                if widths[j] + step >= 1:
-                    widths[j] += step
-                    diff -= step
-                k += 1
-        elif not moved:
-            widths = list(prev_widths)
-
-    best = Grid2DResult(
-        best.col_widths, best.row_heights, max_outer, total_rounds,
-        bench_cost, best.converged, best.imbalance, best.times,
-    )
-    return best
-
-
-def cpm_partition_2d(
-    grid: Sequence[Sequence[SpeedFn2D]], M: int, N: int
-) -> Tuple[Grid2DResult, float]:
-    """The conventional baseline: ONE benchmark round at the even distribution
-    gives each processor a speed constant; rows/columns split proportionally.
-    Returns (result, bench_cost)."""
-    p, q = len(grid), len(grid[0])
-    w0, r0 = N // q, M // p
-    speeds = [[grid[i][j](float(r0), float(w0)) for j in range(q)] for i in range(p)]
-    bench_cost = max(
-        (r0 * w0) / speeds[i][j] for i in range(p) for j in range(q)
-    )
-    col_speed = [sum(speeds[i][j] for i in range(p)) for j in range(q)]
-    widths = cpm_partition(col_speed, N)
-    rows = [cpm_partition([speeds[i][j] for i in range(p)], M) for j in range(q)]
-    times = [
-        _col_times(grid, j, widths, rows[j]) for j in range(q)
-    ]
-    res = Grid2DResult(widths, rows, 1, 1, bench_cost, True, _flat_imbalance(times), times)
-    return res, bench_cost
-
-
 def _rebalance_widths(widths: List[int], times: List[List[float]], rows, N: int, *, damp: float = 0.5) -> List[int]:
     """Outer step (ii): widths ∝ column speed sums, RELAXED by ``damp`` —
     the undamped update oscillates when speeds bend with the allocation
@@ -293,6 +102,95 @@ def _rebalance_widths(widths: List[int], times: List[List[float]], rows, N: int,
     return new_widths
 
 
+def _to_grid2d(part) -> Grid2DResult:
+    """Repack a facade ``Partition`` into the legacy result type."""
+    diag = part.diagnostics
+    return Grid2DResult(
+        col_widths=list(part.col_widths),
+        row_heights=[list(r) for r in part.row_heights],
+        outer_iterations=part.iterations,
+        total_rounds=diag.get("total_rounds", 0),
+        bench_cost=diag.get("bench_cost", 0.0),
+        converged=part.converged,
+        imbalance=part.imbalance,
+        times=[list(t) for t in diag.get("times", [])],
+    )
+
+
+def bank_repartition_2d(
+    fpms: Sequence[Sequence[PiecewiseLinearFPM]],
+    fpm_width: Sequence[Sequence[Optional[int]]],
+    widths: Sequence[int],
+    M: int,
+    *,
+    min_units: int = 1,
+    backend: str = "numpy",
+) -> List[List[int]]:
+    """Re-partition EVERY column's rows from the surviving FPM estimates in
+    one call — no new benchmarks.
+
+    .. deprecated:: use ``Scheduler.repartition_grid``.
+    """
+    from .scheduler import Policy, Scheduler
+    from .speedstore import _warn_legacy
+
+    _warn_legacy("bank_repartition_2d()", "Scheduler.repartition_grid()")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    sched = Scheduler(policy=Policy.GRID2D, backend=backend)
+    return sched.repartition_grid(fpms, fpm_width, widths, M, min_units=min_units)
+
+
+def dfpa_partition_2d(
+    grid: Sequence[Sequence[SpeedFn2D]],
+    M: int,
+    N: int,
+    eps: float,
+    *,
+    max_outer: int = 40,
+    inner_max_iter: int = 15,
+    width_tol: float = 0.02,
+    min_units: int = 1,
+    backend: str = "numpy",
+) -> Grid2DResult:
+    """DFPA-based nested 2-D partitioning over ground-truth speeds ``grid``.
+
+    .. deprecated:: use ``Scheduler(grid=grid, policy=Policy.GRID2D)
+       .partition_grid(M, N, eps=...)``.
+    """
+    from .scheduler import Policy, Scheduler
+    from .speedstore import _warn_legacy
+
+    _warn_legacy("dfpa_partition_2d()", "Scheduler.partition_grid()")
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    sched = Scheduler(grid=grid, policy=Policy.GRID2D, backend=backend)
+    part = sched.partition_grid(
+        M, N, eps=eps, max_outer=max_outer, inner_max_iter=inner_max_iter,
+        width_tol=width_tol, min_units=min_units,
+    )
+    return _to_grid2d(part)
+
+
+def cpm_partition_2d(
+    grid: Sequence[Sequence[SpeedFn2D]], M: int, N: int
+) -> Tuple[Grid2DResult, float]:
+    """The conventional baseline: ONE benchmark round at the even distribution
+    gives each processor a speed constant; rows/columns split proportionally.
+    Returns (result, bench_cost).
+
+    .. deprecated:: use ``Scheduler(grid=grid, policy=Policy.CPM)
+       .partition_grid(M, N)``.
+    """
+    from .scheduler import Policy, Scheduler
+    from .speedstore import _warn_legacy
+
+    _warn_legacy("cpm_partition_2d()", "Scheduler.partition_grid()")
+    part = Scheduler(grid=grid, policy=Policy.CPM).partition_grid(M, N)
+    res = _to_grid2d(part)
+    return res, res.bench_cost
+
+
 def ffmpa_partition_2d(
     grid: Sequence[Sequence[SpeedFn2D]],
     M: int,
@@ -303,47 +201,33 @@ def ffmpa_partition_2d(
 ) -> Grid2DResult:
     """FFMPA baseline [18]: the FULL models are given (pre-built), so the
     nested iteration runs entirely on the host with zero benchmark cost.
-    Rows are partitioned directly in ROW units (one row of width w = one
-    unit), avoiding unit->row rounding distortion.  The analytic full models
-    have no piecewise representation, so this baseline exercises the scalar
-    partition path (``partition_units`` falls back automatically)."""
-    p, q = len(grid), len(grid[0])
-    widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
-    rows: List[List[int]] = [[M // p] * p for _ in range(q)]
-    times: List[List[float]] = [[0.0] * p for _ in range(q)]
-    best = None
-    for outer in range(1, max_outer + 1):
-        for j in range(q):
-            w = widths[j]
-            models = [
-                AnalyticModel(
-                    (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
-                )
-                for i in range(p)
-            ]
-            rows[j] = partition_units(models, M, min_units=1)
-            times[j] = _col_times(grid, j, widths, rows[j])
-        imb = _flat_imbalance(times)
-        if best is None or imb < best.imbalance:
-            best = Grid2DResult(list(widths), [list(r) for r in rows], outer, 0, 0.0, imb <= eps, imb, [list(t) for t in times])
-        if imb <= eps:
-            return best
-        new_widths = _rebalance_widths(widths, times, rows, N)
-        if new_widths == widths:
-            return best
-        widths = new_widths
-    return best
+
+    .. deprecated:: use ``Scheduler(grid=grid, policy=Policy.FFMPA)
+       .partition_grid(M, N, eps=...)``.
+    """
+    from .scheduler import Policy, Scheduler
+    from .speedstore import _warn_legacy
+
+    _warn_legacy("ffmpa_partition_2d()", "Scheduler.partition_grid()")
+    part = Scheduler(grid=grid, policy=Policy.FFMPA).partition_grid(
+        M, N, eps=eps, max_outer=max_outer
+    )
+    return _to_grid2d(part)
 
 
 def app_time_2d(
     grid: Sequence[Sequence[SpeedFn2D]],
-    result: Grid2DResult,
+    result,
     K: int,
     *,
     bcast_overhead: float = 1.0e-3,
 ) -> float:
     """Full 2-D matmul app time: K pivot steps, each costing the slowest
-    processor's panel update + broadcast overhead (paper Fig. 7(a))."""
+    processor's panel update + broadcast overhead (paper Fig. 7(a)).
+
+    Accepts either the legacy :class:`Grid2DResult` or a facade
+    ``Partition`` — both expose ``col_widths`` / ``row_heights``.
+    """
     step = 0.0
     for j, w in enumerate(result.col_widths):
         for i, r in enumerate(result.row_heights[j]):

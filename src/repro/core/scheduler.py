@@ -1,0 +1,916 @@
+"""Scheduler: the unified facade over the paper's partitioning lifecycle.
+
+The paper's core contribution is an *online* loop — estimate partial speed
+functions during execution, repartition cheaply, repeat.  Before this module
+that loop was scattered across free functions with inconsistent knobs
+(``partition_units(..., vectorize=, backend=)``, ``dfpa(...)``,
+``bank_repartition_2d(...)``, ``BalanceController``, ``StragglerDetector``
+wiring, ``elastic_rebalance``), each re-deriving scalar-vs-bank-vs-jax
+dispatch per call.  ``Scheduler`` consolidates it behind one session-style
+API, constructed from a :class:`~repro.core.speedstore.SpeedStore` (backend
+resolved **once**) plus a :class:`Policy`:
+
+  * ``partition(n, caps, min_units)`` — one optimal distribution from the
+    current models (the paper's step 3);
+  * ``observe(times)``               — fold one round's measured times into
+    the estimates (step 5), EMA-smoothed, repartitioning when the imbalance
+    exceeds ``eps`` (the online controller previously in
+    ``runtime/balance.py``);
+  * ``repartition()``                — force a re-partition from the current
+    estimates;
+  * ``autotune(executor, n, eps)``   — the full DFPA measurement loop of the
+    paper (previously ``core/dfpa.py``);
+  * ``partition_grid(M, N)``         — the nested 2-D partitioner of §3.2
+    (previously ``core/partition2d.py``), policy-selected CPM / FFMPA /
+    DFPA-based;
+  * ``join(k)`` / ``leave(g)`` / ``resize(...)`` — elastic membership with
+    warm-started re-partition (previously ``runtime/elastic.py``);
+  * ``straggler_actions(times)``     — FPM-residual health detection with
+    automatic reprofiling (previously hand-wired around
+    ``runtime/straggler.py``);
+  * ``state_dict()`` / ``from_state()`` — full-fidelity persistence: config,
+    estimates, EMA state and current distribution round-trip, so a restored
+    scheduler produces bit-identical next-round allocations.
+
+Every method returns (where a distribution is produced) a single typed
+:class:`Partition` instead of the previous mix of bare lists,
+``DFPAResult`` and ``Grid2DResult``; the legacy entry points survive as thin
+deprecation shims that delegate here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .executor import Executor, SimulatedExecutor
+from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
+from .modelbank import ModelBank
+from .partition2d import _col_times, _flat_imbalance, _rebalance_widths
+from .speedstore import SpeedStore
+
+__all__ = ["Policy", "Partition", "Scheduler"]
+
+
+class Policy(Enum):
+    """Which performance-model policy drives the distribution.
+
+    * ``CPM``    — constant performance models (the conventional baseline);
+    * ``FFMPA``  — pre-built full functional models (partition once, no
+      benchmarking);
+    * ``DFPA``   — the paper's algorithm: partial models built online from
+      observations (``autotune`` / ``observe``);
+    * ``GRID2D`` — the nested 2-D DFPA partitioner of §3.2 (requires
+      ``grid=``).
+    """
+
+    CPM = "cpm"
+    FFMPA = "ffmpa"
+    DFPA = "dfpa"
+    GRID2D = "grid2d"
+
+
+@dataclass
+class Partition:
+    """One partitioning outcome — the single result type of the facade.
+
+    For 1-D partitions ``allocations[i]`` is processor ``i``'s unit count.
+    For grid partitions ``col_widths``/``row_heights`` are authoritative and
+    ``allocations`` flattens the row heights column-major
+    (``[rows[j][i] for j for i]``).
+    """
+
+    allocations: List[int]
+    t_star: Optional[float]  # continuous equal-time point (None for grid/loop results)
+    makespan: Optional[float]  # estimated (or measured) slowest-processor time
+    imbalance: float  # max |t_i - t_j| / t_i over working processors
+    converged: bool
+    iterations: int
+    policy: Policy
+    backend: str
+    times: Optional[List[float]] = None  # per-processor times backing the metrics
+    col_widths: Optional[List[int]] = None  # grid only
+    row_heights: Optional[List[List[int]]] = None  # grid only
+    diagnostics: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def d(self) -> List[int]:
+        """Alias for ``allocations`` (the paper's output array ``d``)."""
+        return self.allocations
+
+
+def _even(n: int, p: int) -> List[int]:
+    base, rem = divmod(n, p)
+    return [base + (1 if i < rem else 0) for i in range(p)]
+
+
+def _probe_neighbour(d, times, seen, caps, min_units):
+    """First unseen 1-unit transfer from slower to faster processors (the
+    deterministic fixed-point escape of the DFPA loop)."""
+    p = len(d)
+    order_slow = sorted(range(p), key=lambda i: times[i], reverse=True)
+    order_fast = sorted(range(p), key=lambda i: times[i])
+    for i in order_slow:
+        if d[i] - 1 < min_units:
+            continue
+        for j in order_fast:
+            if i == j:
+                continue
+            if caps is not None and d[j] + 1 > caps[j]:
+                continue
+            cand = list(d)
+            cand[i] -= 1
+            cand[j] += 1
+            if tuple(cand) not in seen:
+                return cand
+    return None
+
+
+_UNSET = object()
+
+
+class Scheduler:
+    """Session-style facade over the self-adaptable partitioning lifecycle.
+
+    Construct from a :class:`SpeedStore` (or let the constructor build one:
+    ``num_groups`` empty estimates for the online loop, or nothing yet for a
+    cold ``autotune``), pick a :class:`Policy`, then drive the lifecycle
+    methods.  The backend is fixed at construction — no per-call
+    ``backend=``/``vectorize=`` anywhere downstream.
+    """
+
+    def __init__(
+        self,
+        store: Optional[SpeedStore] = None,
+        *,
+        policy: Policy = Policy.DFPA,
+        grid: Optional[Sequence[Sequence[Any]]] = None,
+        n_units: Optional[int] = None,
+        num_groups: Optional[int] = None,
+        eps: float = 0.1,
+        min_units: int = 0,
+        caps: Optional[Sequence[int]] = None,
+        smooth: float = 0.5,
+        backend: str = "numpy",
+        detector: Optional[Any] = None,
+        analytic_tol: Optional[float] = None,
+    ):
+        if backend not in ("scalar", "numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.policy = policy
+        self.grid = grid
+        self.eps = float(eps)
+        self.min_units = int(min_units)
+        self.caps = list(caps) if caps is not None else None
+        self.smooth = float(smooth)
+        self.n_units = int(n_units) if n_units is not None else None
+        self.analytic_tol = analytic_tol
+        self._backend = backend
+        if store is None and num_groups is not None:
+            store = SpeedStore.empty(int(num_groups), backend=backend)
+        self.store = store
+        self.detector = detector
+        # online state
+        self.d: List[int] = (
+            _even(self.n_units, self.num_groups)
+            if self.n_units is not None and self.num_groups
+            else []
+        )
+        self._ema: Dict[Tuple[int, int], float] = {}
+        self.rebalances = 0
+        self.steps_observed = 0
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def from_models(
+        cls,
+        models: Sequence[Any],
+        *,
+        backend: str = "auto",
+        policy: Policy = Policy.DFPA,
+        analytic_tol: Optional[float] = None,
+        analytic_hi: Optional[float] = None,
+        **kw,
+    ) -> "Scheduler":
+        store = SpeedStore.from_models(
+            models, backend=backend, analytic_tol=analytic_tol, analytic_hi=analytic_hi
+        )
+        return cls(store, policy=policy, backend=store.backend, **kw)
+
+    @classmethod
+    def from_speeds(
+        cls, speeds: Sequence[float], *, policy: Policy = Policy.CPM, **kw
+    ) -> "Scheduler":
+        return cls(SpeedStore.from_speeds(speeds), policy=policy, **kw)
+
+    # -- shape / introspection ------------------------------------------------
+
+    @property
+    def num_groups(self) -> int:
+        return self.store.p if self.store is not None else 0
+
+    @property
+    def backend(self) -> str:
+        return self.store.backend if self.store is not None else self._backend
+
+    @property
+    def models(self) -> List[Any]:
+        return self.store.models
+
+    @property
+    def imbalance_estimate(self) -> float:
+        ts = [
+            m.time(di)
+            for m, di in zip(self.store.models, self.d)
+            if di > 0 and getattr(m, "num_points", 1)
+        ]
+        return imbalance(ts)
+
+    # -- one-shot partitioning (paper step 3) ---------------------------------
+
+    def partition(
+        self,
+        n: Optional[int] = None,
+        caps: Optional[Sequence[int]] = None,
+        min_units: Optional[int] = None,
+        *,
+        eps: Optional[float] = None,
+    ) -> Partition:
+        """Compute one optimal distribution from the current models.
+
+        In grid mode pass ``n=(M, N)`` (or call :meth:`partition_grid`).
+        Updates the scheduler's current distribution ``d``.
+        """
+        if self.grid is not None:
+            if isinstance(n, (tuple, list)) and len(n) == 2:
+                return self.partition_grid(int(n[0]), int(n[1]), eps=eps)
+            raise ValueError("grid scheduler: pass n=(M, N) or call partition_grid()")
+        if n is None:
+            n = self.n_units
+        if n is None:
+            raise ValueError("no unit count: pass n or construct with n_units")
+        n = int(n)
+        self.n_units = n
+        if caps is not None:
+            self.caps = list(caps)
+        mu = self.min_units if min_units is None else int(min_units)
+        d, t_star = self.store.partition(n, self.caps, min_units=mu)
+        self.d = list(d)
+        return self._flat_result(d, t_star, eps=self.eps if eps is None else eps)
+
+    def repartition(self) -> Partition:
+        """Force a re-partition from the current estimates (the facade's
+        version of calling the free partitioner again)."""
+        old = list(self.d)
+        part = self.partition(self.n_units, min_units=self.min_units)
+        if old and part.allocations != old:
+            self.rebalances += 1
+        return part
+
+    def _flat_result(self, d: List[int], t_star: Optional[float], *, eps: float) -> Partition:
+        times = self.store.times([float(v) for v in d])
+        pts = self.store.num_points
+        valid = [
+            float(t)
+            for t, di, k in zip(times, d, pts)
+            if di > 0 and k > 0 and np.isfinite(t)
+        ]
+        imb = imbalance(valid)
+        return Partition(
+            allocations=list(d),
+            t_star=t_star,
+            makespan=max(valid) if valid else None,
+            imbalance=imb,
+            converged=imb <= eps,
+            iterations=0,
+            policy=self.policy,
+            backend=self.backend,
+            times=[float(t) if np.isfinite(t) else 0.0 for t in times],
+        )
+
+    # -- the online loop (paper steps 4-5, previously BalanceController) ------
+
+    def observe(self, times: Sequence[float]) -> bool:
+        """Fold one round's per-group times in; returns True if the
+        distribution changed (callers must re-split the next round's units).
+
+        EMA smoothing (``smooth``) de-noises wall-clock measurements; the
+        paper's deterministic-benchmark assumption does not hold for real
+        step times.
+        """
+        if len(times) != self.num_groups:
+            raise ValueError("times length != num_groups")
+        if self.n_units is None:
+            raise ValueError("observe() needs n_units (construct with n_units=...)")
+        self.steps_observed += 1
+        speeds = [1.0] * self.num_groups
+        valid = [False] * self.num_groups
+        for i, (di, ti) in enumerate(zip(self.d, times)):
+            if di <= 0 or ti <= 0:
+                continue
+            key = (i, di)
+            ema = self._ema.get(key)
+            ema = ti if ema is None else (1 - self.smooth) * ema + self.smooth * ti
+            self._ema[key] = ema
+            speeds[i], valid[i] = di / ema, True
+        self.store.fold_in([float(di) for di in self.d], speeds, valid)
+        if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
+            return False
+        new_d = self.store.partition_units(
+            self.n_units, self.caps, min_units=self.min_units
+        )
+        if new_d == self.d:
+            return False
+        self.d = new_d
+        self.rebalances += 1
+        return True
+
+    # -- the DFPA measurement loop (previously core/dfpa.py) ------------------
+
+    def autotune(
+        self,
+        executor: Executor,
+        n: Optional[int] = None,
+        eps: Optional[float] = None,
+        *,
+        max_iter: int = 100,
+        caps: Optional[Sequence[int]] = None,
+        min_units: Optional[int] = None,
+        warm_start_d: Optional[Sequence[int]] = None,
+        probe_budget: Optional[int] = None,
+    ) -> Partition:
+        """Run the paper's DFPA loop over ``executor``:
+
+          1. run the even distribution (or the warm-start partition when the
+             store already holds estimates), gather times;
+          2. imbalance <= eps -> done;
+          3. fold observations into the partial FPM estimates;
+          4. re-partition optimally for the current estimates, execute,
+             measure; goto 3 — with the deterministic local-probe escape
+             when the partitioner reaches a fixed point short of eps.
+
+        Leaves the scheduler warm: the estimates, ``n_units`` and the final
+        distribution stay on the session for ``observe``/``join``/``leave``.
+        """
+        p = executor.num_procs
+        if p < 1:
+            raise ValueError("need at least one processor")
+        n = int(n if n is not None else self.n_units)
+        if n < p:
+            raise ValueError(f"DFPA requires n >= p (n={n}, p={p})")
+        eps = float(eps if eps is not None else self.eps)
+        if eps <= 0:
+            raise ValueError("eps must be positive")
+        if caps is None:
+            caps = self.caps
+        mu = self.min_units if min_units is None else int(min_units)
+
+        if self.store is None:
+            self.store = SpeedStore.empty(p, backend=self._backend)
+        elif self.store.p != p:
+            raise ValueError(
+                f"store has {self.store.p} models but executor has {p} processors"
+            )
+        store = self.store
+        models = store.models
+
+        history: List[Tuple[List[int], List[float]]] = []
+        seen: Dict[Tuple[int, ...], List[float]] = {}
+        if probe_budget is None:
+            probe_budget = 2 * p
+        probes_left = probe_budget
+
+        def measure(d: List[int]) -> List[float]:
+            times = executor.run(d)
+            history.append((list(d), list(times)))
+            seen[tuple(d)] = list(times)
+            darr = [float(di) for di in d]
+            sarr = [di / ti if (di > 0 and ti > 0) else 1.0 for di, ti in zip(d, times)]
+            valid = [di > 0 and ti > 0 for di, ti in zip(d, times)]
+            store.fold_in(darr, sarr, valid)  # s_i(d_i) = d_i / t_i
+            return list(times)
+
+        def repartition() -> List[int]:
+            return store.partition_units(n, caps, min_units=mu)
+
+        # Step 1: initial distribution — even split (paper), or the
+        # warm-start partition when prior estimates exist (elastic restart).
+        if warm_start_d is not None:
+            d = list(map(int, warm_start_d))
+            if sum(d) != n or len(d) != p:
+                raise ValueError("warm_start_d must be a length-p partition of n")
+        elif all(getattr(m, "num_points", 0) > 0 for m in models):
+            d = repartition()
+        else:
+            d = _even(n, p)
+        times = measure(d)
+        it = 1
+
+        best_d, best_t, best_imb = list(d), list(times), imbalance(times)
+
+        def finish(d, t, it, converged, imb) -> Partition:
+            self.n_units = n
+            self.d = list(d)
+            self.eps = eps
+            return Partition(
+                allocations=list(d),
+                t_star=None,
+                makespan=max(t) if t else None,
+                imbalance=imb,
+                converged=converged,
+                iterations=it,
+                policy=self.policy,
+                backend=store.backend,
+                times=list(t),
+                diagnostics={
+                    "history": history,
+                    "models": models,
+                    "probes_used": probe_budget - probes_left,
+                },
+            )
+
+        while True:
+            imb = imbalance(times)
+            if imb < best_imb:
+                best_d, best_t, best_imb = list(d), list(times), imb
+            if imb <= eps:
+                return finish(list(d), list(times), it, True, imb)
+            if it >= max_iter:
+                return finish(best_d, best_t, it, False, best_imb)
+            # Steps 3+5 happened inside measure() (scalar estimates updated,
+            # device carry folded on the jax backend); step 4: re-partition.
+            d_new = repartition()
+            if tuple(d_new) in seen:
+                t_seen = seen[tuple(d_new)]
+                imb_seen = imbalance(t_seen)
+                if imb_seen < best_imb:
+                    best_d, best_t, best_imb = list(d_new), list(t_seen), imb_seen
+                probe = (
+                    _probe_neighbour(d_new, t_seen, seen, caps, mu)
+                    if probes_left > 0
+                    else None
+                )
+                if probe is None:
+                    return finish(best_d, best_t, it, best_imb <= eps, best_imb)
+                probes_left -= 1
+                d_new = probe
+            d = d_new
+            times = measure(d)
+            it += 1
+
+    # -- straggler detection (previously hand-wired) --------------------------
+
+    def straggler_actions(self, times: Sequence[float], *, auto_reprofile: bool = True):
+        """Scan one round's observed times against the models' predictions;
+        returns one ``StragglerAction`` per group.  REPROFILE actions are
+        applied automatically (stale estimates invalidated) unless
+        ``auto_reprofile=False``; QUARANTINE is reported for the caller to
+        act on (``leave(group)``)."""
+        from ..runtime.straggler import StragglerAction, StragglerDetector
+
+        if self.detector is None:
+            self.detector = StragglerDetector()
+        actions = self.detector.update_batch(self.store.bank(), self.d, times)
+        if auto_reprofile:
+            for g, act in enumerate(actions):
+                if act is StragglerAction.REPROFILE:
+                    self.reprofile(g)
+        return actions
+
+    def reprofile(self, group: int) -> None:
+        """Invalidate a group's estimate (keep only the freshest operating
+        point so the partitioner stays feasible); the device carry is dropped
+        and rebuilt lazily."""
+        m = self.store.models[group]
+        if getattr(m, "num_points", 0) > 1:
+            di = self.d[group] if self.d else 0
+            pts = [(x, s) for x, s in m.as_points() if x == float(di)]
+            self.store.reset_row(group, pts)
+        for k in [k for k in self._ema if k[0] == group]:
+            del self._ema[k]
+        if self.store._jbank is not None:
+            self.store.drop_carry()
+
+    # -- elastic membership (previously runtime/elastic.py) -------------------
+
+    def resize(
+        self,
+        surviving: Sequence[int],
+        joined: int = 0,
+        *,
+        caps=_UNSET,
+    ) -> "Scheduler":
+        """New scheduler for a changed group set: survivors keep their FPM
+        points (§3.2's reuse of previous benchmarks); joiners start from an
+        optimistic single-point estimate borrowed from the fastest survivor
+        (corrected by their first measurement; optimistic starts avoid
+        starving the newcomer).  Re-partitions immediately when every group
+        has at least one point."""
+        old_models = self.store.models
+        models: List[PiecewiseLinearFPM] = [
+            PiecewiseLinearFPM.from_points(old_models[i].as_points()) for i in surviving
+        ]
+        donor = None
+        for m in models:
+            if m.num_points:
+                cand = max(m.as_points(), key=lambda pt: pt[1])
+                if donor is None or cand[1] > donor[1]:
+                    donor = cand
+        for _ in range(joined):
+            models.append(
+                PiecewiseLinearFPM.from_points([donor]) if donor else PiecewiseLinearFPM()
+            )
+        if caps is _UNSET:
+            if self.caps is None:
+                caps = None
+            else:
+                # Joiners inherit the most generous survivor cap when the
+                # session has no unit count yet (n_units is the natural cap
+                # otherwise) — a None must never reach _prep_unit_caps.
+                join_cap = (
+                    self.n_units
+                    if self.n_units is not None
+                    else max((self.caps[i] for i in surviving), default=None)
+                )
+                if joined and join_cap is None:  # no survivors, no n_units
+                    caps = None
+                else:
+                    caps = [self.caps[i] for i in surviving] + [join_cap] * joined
+        new = Scheduler(
+            SpeedStore.from_models(models, backend=self.backend),
+            policy=self.policy,
+            n_units=self.n_units,
+            eps=self.eps,
+            min_units=self.min_units,
+            caps=caps,
+            smooth=self.smooth,
+            backend=self.backend,
+            detector=self.detector,
+        )
+        if all(m.num_points for m in models) and new.n_units is not None:
+            new.d = new.store.partition_units(
+                new.n_units, new.caps, min_units=new.min_units
+            )
+        return new
+
+    def _adopt(self, other: "Scheduler") -> None:
+        self.store = other.store
+        self.d = list(other.d)
+        self.caps = other.caps
+        self._ema = {}  # group indices shifted; stale EMA keys are invalid
+
+    def join(self, count: int = 1, *, caps=_UNSET) -> "Scheduler":
+        """``count`` new groups join; warm re-partition, in place."""
+        self._adopt(self.resize(list(range(self.num_groups)), joined=count, caps=caps))
+        return self
+
+    def leave(self, groups, *, caps=_UNSET) -> "Scheduler":
+        """Group (or groups) leave the fleet; survivors keep their estimates
+        and the units are redistributed immediately, in place."""
+        gone = {int(groups)} if np.isscalar(groups) else {int(g) for g in groups}
+        surviving = [i for i in range(self.num_groups) if i not in gone]
+        self._adopt(self.resize(surviving, caps=caps))
+        return self
+
+    # -- nested 2-D partitioning (previously core/partition2d.py) -------------
+
+    def partition_grid(
+        self,
+        M: int,
+        N: int,
+        *,
+        eps: Optional[float] = None,
+        max_outer: int = 40,
+        inner_max_iter: int = 15,
+        width_tol: float = 0.02,
+        min_units: int = 1,
+    ) -> Partition:
+        """Partition an ``M x N`` block matrix over the ``p x q`` grid of
+        speed functions the scheduler was constructed with, by the policy:
+
+          * ``GRID2D`` / ``DFPA`` — the paper's nested algorithm: per-column
+            DFPA row partitions (online partial models), outer column-width
+            rebalancing, with all of §3.2's cost optimizations;
+          * ``FFMPA`` — full models given, zero benchmark cost (with
+            ``analytic_tol`` the analytic models are sample-and-banked onto
+            the vectorized path);
+          * ``CPM``   — one benchmark round, proportional split.
+        """
+        if self.grid is None:
+            raise ValueError("no grid: construct Scheduler(grid=...) first")
+        eps = float(eps if eps is not None else self.eps)
+        if self.policy in (Policy.GRID2D, Policy.DFPA):
+            return self._grid_dfpa(
+                M, N, eps, max_outer=max_outer, inner_max_iter=inner_max_iter,
+                width_tol=width_tol, min_units=min_units,
+            )
+        if self.policy is Policy.FFMPA:
+            return self._grid_ffmpa(M, N, eps, max_outer=max_outer)
+        if self.policy is Policy.CPM:
+            return self._grid_cpm(M, N)
+        raise ValueError(f"policy {self.policy} cannot partition a grid")
+
+    def _grid_result(
+        self, widths, rows, outer, total_rounds, bench_cost, converged, imb, times
+    ) -> Partition:
+        flat = [int(r) for col in rows for r in col]
+        flat_t = [t for col in times for t in col]
+        pos = [t for t in flat_t if t > 0]
+        return Partition(
+            allocations=flat,
+            t_star=None,
+            makespan=max(pos) if pos else None,
+            imbalance=imb,
+            converged=converged,
+            iterations=outer,
+            policy=self.policy,
+            backend=self.backend,
+            times=flat_t,
+            col_widths=list(widths),
+            row_heights=[list(r) for r in rows],
+            diagnostics={"total_rounds": total_rounds, "bench_cost": bench_cost,
+                         "times": [list(t) for t in times]},
+        )
+
+    def _grid_dfpa(
+        self, M, N, eps, *, max_outer, inner_max_iter, width_tol, min_units
+    ) -> Partition:
+        grid = self.grid
+        p, q = len(grid), len(grid[0])
+        widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
+        rows: List[Optional[List[int]]] = [None] * q  # warm-start rows per column
+        # FPM estimates per (i, j), in ROW units at the width they were
+        # observed; reused across widths by rescaling rows/s by (old_w/new_w).
+        fpms: List[List[PiecewiseLinearFPM]] = [
+            [PiecewiseLinearFPM() for _ in range(q)] for _ in range(p)
+        ]
+        fpm_width: List[List[Optional[int]]] = [[None] * q for _ in range(p)]
+
+        total_rounds = 0
+        bench_cost = 0.0
+        times: List[List[float]] = [[0.0] * p for _ in range(q)]
+        prev_widths: Optional[List[int]] = None
+        best: Optional[Partition] = None
+
+        for outer in range(1, max_outer + 1):
+            col_round_costs = [0.0] * q
+            for j in range(q):
+                w = widths[j]
+                if (
+                    prev_widths is not None
+                    and rows[j] is not None
+                    and w == prev_widths[j]
+                ):
+                    # Paper's optimization: width unchanged -> keep the
+                    # column's partition; no re-benchmark needed.
+                    times[j] = _col_times(grid, j, widths, rows[j])
+                    continue
+                # Rescale surviving FPM points to the new width (g ~ const in
+                # w): one batched speed-scale over the column's model bank.
+                warm = None
+                if all(
+                    fpm_width[i][j] is not None and fpms[i][j].num_points > 0
+                    for i in range(p)
+                ):
+                    col_bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
+                    scale = [fpm_width[i][j] / w for i in range(p)]
+                    warm = col_bank.scaled(scale).to_models()
+                ex = SimulatedExecutor(
+                    time_fns=[
+                        (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
+                        for i in range(p)
+                    ]
+                )
+                child = Scheduler(
+                    SpeedStore.from_models(
+                        [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm],
+                        backend=self._backend,
+                    )
+                    if warm is not None
+                    else SpeedStore.empty(p, backend=self._backend),
+                    policy=Policy.DFPA,
+                    backend=self._backend,
+                )
+                res = child.autotune(
+                    ex, M, eps,
+                    max_iter=inner_max_iter,
+                    min_units=min_units,
+                    warm_start_d=rows[j] if rows[j] is not None else None,
+                    # Probe fixed points only on the COLD first partition of a
+                    # column; warm refinements rely on the outer width update
+                    # for fresh information — unbounded probing churned 2256
+                    # rounds / 76% cost at M=N=768.
+                    probe_budget=p if warm is None else 0,
+                )
+                rows[j] = list(res.allocations)
+                times[j] = list(res.times)
+                col_models = res.diagnostics["models"]
+                for i in range(p):
+                    fpms[i][j] = col_models[i]
+                    fpm_width[i][j] = w
+                total_rounds += res.iterations
+                col_round_costs[j] = ex.total_cost
+            # Columns run their inner DFPA in parallel -> cost = slowest col.
+            bench_cost += max(col_round_costs) if col_round_costs else 0.0
+
+            imb = _flat_imbalance(times)
+            snap = self._grid_result(
+                widths, rows, outer, total_rounds, bench_cost, imb <= eps, imb, times
+            )
+            if best is None or imb < best.imbalance:
+                best = snap
+            if imb <= eps:
+                return snap
+
+            # Outer step (ii): columns' widths ∝ column speed sums (damped).
+            # Paper's freeze optimization: revert sub-tolerance width changes
+            # (skipping their columns' re-benchmark next round) and hand the
+            # residual to the columns that did move.
+            prev_widths = list(widths)
+            widths = _rebalance_widths(widths, times, rows, N)
+            moved = [
+                j for j in range(q)
+                if abs(widths[j] - prev_widths[j]) > width_tol * prev_widths[j]
+            ]
+            if moved and len(moved) < q:
+                for j in range(q):
+                    if j not in moved:
+                        widths[j] = prev_widths[j]
+                diff = N - sum(widths)
+                k = 0
+                while diff != 0:
+                    j = moved[k % len(moved)]
+                    step = 1 if diff > 0 else -1
+                    if widths[j] + step >= 1:
+                        widths[j] += step
+                        diff -= step
+                    k += 1
+            elif not moved:
+                widths = list(prev_widths)
+
+        return self._grid_result(
+            best.col_widths, best.row_heights, max_outer, total_rounds,
+            bench_cost, best.converged, best.imbalance, best.diagnostics["times"],
+        )
+
+    def _grid_cpm(self, M, N) -> Partition:
+        """The conventional baseline: ONE benchmark round at the even
+        distribution gives each processor a speed constant; rows/columns
+        split proportionally.  ``diagnostics["bench_cost"]`` carries the
+        single round's cost."""
+        grid = self.grid
+        p, q = len(grid), len(grid[0])
+        w0, r0 = N // q, M // p
+        speeds = [[grid[i][j](float(r0), float(w0)) for j in range(q)] for i in range(p)]
+        bench_cost = max(
+            (r0 * w0) / speeds[i][j] for i in range(p) for j in range(q)
+        )
+        col_speed = [sum(speeds[i][j] for i in range(p)) for j in range(q)]
+        widths = SpeedStore.from_speeds(col_speed).partition_units(N)
+        rows = [
+            SpeedStore.from_speeds([speeds[i][j] for i in range(p)]).partition_units(M)
+            for j in range(q)
+        ]
+        times = [_col_times(grid, j, widths, rows[j]) for j in range(q)]
+        return self._grid_result(
+            widths, rows, 1, 1, bench_cost, True, _flat_imbalance(times), times
+        )
+
+    def _grid_ffmpa(self, M, N, eps, *, max_outer) -> Partition:
+        """FFMPA baseline [18]: the FULL models are given (pre-built), so the
+        nested iteration runs entirely on the host with zero benchmark cost.
+        Rows are partitioned directly in ROW units.  With ``analytic_tol``
+        set the analytic models are sample-and-banked so this baseline rides
+        the vectorized bank path; the default keeps the scalar path."""
+        grid = self.grid
+        p, q = len(grid), len(grid[0])
+        widths = [N // q + (1 if j < N % q else 0) for j in range(q)]
+        rows: List[List[int]] = [[M // p] * p for _ in range(q)]
+        times: List[List[float]] = [[0.0] * p for _ in range(q)]
+        best: Optional[Partition] = None
+        for outer in range(1, max_outer + 1):
+            for j in range(q):
+                w = widths[j]
+                models = [
+                    AnalyticModel(
+                        (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
+                    )
+                    for i in range(p)
+                ]
+                col_store = SpeedStore.from_models(
+                    models,
+                    analytic_tol=self.analytic_tol,
+                    analytic_hi=float(M) if self.analytic_tol is not None else None,
+                )
+                rows[j] = col_store.partition_units(M, min_units=1)
+                times[j] = _col_times(grid, j, widths, rows[j])
+            imb = _flat_imbalance(times)
+            if best is None or imb < best.imbalance:
+                best = self._grid_result(
+                    widths, rows, outer, 0, 0.0, imb <= eps, imb, times
+                )
+            if imb <= eps:
+                return best
+            new_widths = _rebalance_widths(widths, times, rows, N)
+            if new_widths == widths:
+                return best
+            widths = new_widths
+        return best
+
+    def repartition_grid(
+        self,
+        fpms: Sequence[Sequence[PiecewiseLinearFPM]],
+        fpm_width: Sequence[Sequence[Optional[int]]],
+        widths: Sequence[int],
+        M: int,
+        *,
+        min_units: int = 1,
+    ) -> List[List[int]]:
+        """Re-partition EVERY column's rows from surviving FPM estimates in
+        one call — no new benchmarks (the device-side refresh used when
+        widths move but no fresh benchmarks are wanted).
+
+        ``fpms[i][j]`` / ``fpm_width[i][j]`` are the per-(row, column)
+        estimates and the widths they were observed at; each column's bank is
+        rescaled to its current width and, on the jax backend, all ``q``
+        banks are stacked into one ``[q, p, k]`` tensor whose ``t*``
+        bisections run simultaneously in a single jitted device call.
+        Returns ``rows[j][i]``.
+        """
+        p, q = len(fpms), len(widths)
+        for i in range(p):
+            for j in range(q):
+                if fpm_width[i][j] is None or fpms[i][j].num_points == 0:
+                    raise ValueError(f"no FPM estimate for processor ({i}, {j})")
+        col_banks = []
+        for j in range(q):
+            bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
+            scale = [fpm_width[i][j] / widths[j] for i in range(p)]
+            col_banks.append(bank.scaled(scale))
+        if self._backend == "jax":
+            from .modelbank_jax import JaxModelBank
+
+            stacked = JaxModelBank.stack([JaxModelBank.from_bank(b) for b in col_banks])
+            d = stacked.partition_units(M, min_units=min_units)
+            return [[int(v) for v in row] for row in d]
+        return [
+            SpeedStore.from_bank(b).partition_units(M, min_units=min_units)
+            for b in col_banks
+        ]
+
+    # -- persistence (self-adaptability across restarts) ----------------------
+
+    def state_dict(self) -> Dict:
+        """Full-fidelity session state: config AND estimates AND the EMA /
+        distribution state, so ``from_state`` restores a scheduler whose next
+        ``observe`` produces bit-identical allocations (the legacy
+        ``BalanceController.state_dict`` dropped ``backend``/``smooth`` and
+        friends)."""
+        return {
+            "version": 1,
+            "policy": self.policy.value,
+            "backend": self.backend,
+            "n_units": self.n_units,
+            "num_groups": self.num_groups,
+            "eps": self.eps,
+            "min_units": self.min_units,
+            "smooth": self.smooth,
+            "caps": list(self.caps) if self.caps is not None else None,
+            "d": list(self.d),
+            "points": self.store.state_dict()["points"],
+            "ema": [[int(g), int(du), float(v)] for (g, du), v in self._ema.items()],
+            "rebalances": self.rebalances,
+            "steps_observed": self.steps_observed,
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict, **overrides) -> "Scheduler":
+        """Restore a scheduler saved by :meth:`state_dict`.  ``overrides``
+        replace individual config fields (e.g. ``backend="jax"`` to move a
+        checkpointed session onto the device path)."""
+        cfg = dict(
+            policy=Policy(state.get("policy", Policy.DFPA.value)),
+            n_units=state.get("n_units"),
+            eps=state.get("eps", 0.1),
+            min_units=state.get("min_units", 0),
+            caps=state.get("caps"),
+            smooth=state.get("smooth", 0.5),
+            backend=state.get("backend", "numpy"),
+        )
+        cfg.update(overrides)
+        backend = cfg.pop("backend")
+        models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
+        sched = cls(
+            SpeedStore.from_models(models, backend=backend),
+            backend=backend,
+            **cfg,
+        )
+        sched.d = list(state.get("d", sched.d))
+        sched._ema = {(int(g), int(du)): float(v) for g, du, v in state.get("ema", [])}
+        sched.rebalances = int(state.get("rebalances", 0))
+        sched.steps_observed = int(state.get("steps_observed", 0))
+        return sched

@@ -1,0 +1,503 @@
+"""SpeedStore: one resolved home for the fleet's speed models.
+
+Before this module, every partitioning entry point re-derived the
+scalar-vs-bank-vs-jax decision per call (``_as_bank`` / ``_as_jax_bank`` in
+``partition.py``, carry plumbing in ``dfpa.py`` and ``runtime/balance.py``,
+``vectorize=`` / ``backend=`` kwargs everywhere).  ``SpeedStore`` resolves the
+backend **once**, at construction, and then exposes a single protocol:
+
+  * ``speeds(x)`` / ``times(x)``      — batched model evaluation, ``[p]``;
+  * ``alloc_at_time(t, caps)``        — the geometric partitioner primitive;
+  * ``fold_in(x, s, valid)``          — one observation per processor (the
+    paper's step-5 update), applied to the scalar estimates AND, on the jax
+    backend, to the device-resident carry in the same call;
+  * ``partition_units`` / ``partition_continuous`` — the partitioners of
+    ``partition.py``, dispatched to the pre-resolved backend;
+  * ``state_dict()`` / ``from_state`` — checkpointable estimates.
+
+Three backends, resolved once:
+
+  * ``"scalar"`` — per-model Python objects (``AnalyticModel`` and friends
+    with no piecewise representation, or an explicitly forced baseline);
+  * ``"numpy"``  — the scalar estimates are the source of truth, banked into
+    a :class:`~repro.core.modelbank.ModelBank` per partition call (exactly
+    the legacy behaviour, so allocations are bit-identical);
+  * ``"jax"``    — a :class:`~repro.core.modelbank_jax.JaxModelBank` carry
+    lives on device and is updated by ``fold_in`` (vectorized sorted insert)
+    instead of being rebuilt from the scalars; partitions run under
+    ``jax.jit``.
+
+Analytic sample-and-bank
+------------------------
+
+``AnalyticModel`` (FFMPA's pre-built full models, oracle time functions) has
+no piecewise representation and used to force the scalar fallback.
+``from_models(..., analytic_tol=..., analytic_hi=...)`` adaptively samples
+such models into piecewise-linear FPMs — recursively refining the segment
+whose midpoint interpolation error is worst until every segment is within
+``analytic_tol`` relative error (or ``analytic_max_points`` is hit) — so
+FFMPA-style baselines ride the vectorized bank paths too (ROADMAP:
+analytic-model banking).  The default (``analytic_tol=None``) preserves the
+exact scalar behaviour.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fpm import ConstantModel, PiecewiseLinearFPM, SpeedModel, imbalance
+from .modelbank import ModelBank
+from .partition import (
+    _continuous_bank,
+    _continuous_scalar,
+    _partition_units_bank,
+    _partition_units_scalar,
+    _prep_continuous_caps,
+    _prep_unit_caps,
+)
+
+__all__ = ["SpeedStore", "sample_analytic_points"]
+
+BACKENDS = ("scalar", "numpy", "jax")
+
+
+def _warn_legacy(old: str, new: str) -> None:
+    """One DeprecationWarning per legacy entry point, pointing at the facade."""
+    warnings.warn(
+        f"{old} is deprecated; use {new} — see core/scheduler.py and "
+        "core/speedstore.py (backend resolved once at construction)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def sample_analytic_points(
+    model: SpeedModel,
+    *,
+    hi: float,
+    lo: float = 1.0,
+    tol: float = 0.01,
+    max_points: int = 64,
+) -> List[Tuple[float, float]]:
+    """Adaptive piecewise-linear fit of ``model.speed`` on ``[lo, hi]``.
+
+    Greedy refinement: repeatedly split the segment whose midpoint linear
+    interpolation deviates most from the true speed, until every segment is
+    within relative ``tol`` or ``max_points`` is reached.  The returned
+    points reproduce the analytic speed to ``tol`` wherever it is locally
+    smooth; kinks (paging cliffs) attract points automatically.
+    """
+    lo = max(float(lo), 1e-9)
+    hi = float(hi)
+    if hi <= lo:
+        hi = lo * 2.0
+    xs = [lo, hi]
+    ss = [float(model.speed(lo)), float(model.speed(hi))]
+
+    def _mid_err(k: int) -> Tuple[float, float, float]:
+        xm = 0.5 * (xs[k] + xs[k + 1])
+        s_true = float(model.speed(xm))
+        s_lin = 0.5 * (ss[k] + ss[k + 1])
+        denom = abs(s_true) if s_true != 0.0 else 1e-300
+        return abs(s_lin - s_true) / denom, xm, s_true
+
+    while len(xs) < max_points:
+        worst = None
+        for k in range(len(xs) - 1):
+            err, xm, sm = _mid_err(k)
+            if worst is None or err > worst[0]:
+                worst = (err, k, xm, sm)
+        if worst is None or worst[0] <= tol:
+            break
+        _, k, xm, sm = worst
+        xs.insert(k + 1, xm)
+        ss.insert(k + 1, sm)
+    return [(x, max(s, 1e-300)) for x, s in zip(xs, ss)]
+
+
+class SpeedStore:
+    """Polymorphic model container with the backend resolved at construction.
+
+    Do not call ``__init__`` directly — use :meth:`from_models`,
+    :meth:`from_speeds`, :meth:`from_bank`, :meth:`empty`,
+    :meth:`from_state`, or (for legacy adapter paths) :meth:`resolve`.
+    """
+
+    def __init__(
+        self,
+        models: Optional[List[SpeedModel]],
+        backend: str,
+        *,
+        bank: Optional[ModelBank] = None,
+        jbank=None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        self._models = list(models) if models is not None else None
+        self.backend = backend
+        self._np_bank = bank  # wrapped ModelBank (models is None) only
+        self._jbank = jbank  # device carry (jax backend); None -> lazy rebuild
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def from_models(
+        cls,
+        models: Sequence[SpeedModel],
+        *,
+        backend: str = "auto",
+        analytic_tol: Optional[float] = None,
+        analytic_hi: Optional[float] = None,
+        analytic_lo: float = 1.0,
+        analytic_max_points: int = 64,
+    ) -> "SpeedStore":
+        """Build a store from scalar models, resolving the backend once.
+
+        ``backend="auto"`` picks ``"numpy"`` when every model has a piecewise
+        representation and ``"scalar"`` otherwise.  With ``analytic_tol`` set
+        (and ``analytic_hi`` bounding the sampled range, typically the
+        problem size ``n``), non-piecewise models are sample-and-banked so
+        they can ride the vectorized backends.
+        """
+        models = list(models)
+        if analytic_tol is not None:
+            if analytic_hi is None:
+                raise ValueError("analytic_tol requires analytic_hi (sampling range)")
+            banked = []
+            for m in models:
+                if isinstance(m, (PiecewiseLinearFPM, ConstantModel)) or hasattr(m, "as_points"):
+                    banked.append(m)
+                else:
+                    banked.append(
+                        PiecewiseLinearFPM.from_points(
+                            sample_analytic_points(
+                                m, hi=analytic_hi, lo=analytic_lo,
+                                tol=analytic_tol, max_points=analytic_max_points,
+                            )
+                        )
+                    )
+            models = banked
+        if backend == "auto":
+            try:
+                ModelBank.from_models(models)
+            except TypeError:
+                return cls(models, "scalar")
+            return cls(models, "numpy")
+        if backend == "scalar":
+            return cls(models, "scalar")
+        if backend in ("numpy", "jax"):
+            try:
+                ModelBank.from_models(models)
+            except TypeError:
+                # Mirrors the legacy per-call fallback: non-piecewise models
+                # keep the scalar path even when a banked backend was asked.
+                return cls(models, "scalar")
+            if backend == "jax":
+                return cls(models, "jax", jbank=cls._initial_carry(models))
+            return cls(models, "numpy")
+        raise ValueError(f"unknown backend {backend!r}")
+
+    @staticmethod
+    def _initial_carry(models: Sequence[SpeedModel]):
+        """The DFPA device carry: built from the models when any has points,
+        otherwise the empty bank (identical to the legacy dfpa/controller
+        initialization)."""
+        from .modelbank_jax import JaxModelBank
+
+        if any(getattr(m, "num_points", 0) > 0 for m in models):
+            return JaxModelBank.from_models(models)
+        return JaxModelBank.empty(len(models))
+
+    @classmethod
+    def from_speeds(cls, speeds: Sequence[float], *, backend: str = "numpy") -> "SpeedStore":
+        """CPM store: one constant-speed model per processor."""
+        return cls.from_models([ConstantModel(float(s)) for s in speeds], backend=backend)
+
+    @classmethod
+    def empty(cls, p: int, *, backend: str = "numpy") -> "SpeedStore":
+        """``p`` empty piecewise estimates (the cold-start DFPA state)."""
+        models = [PiecewiseLinearFPM() for _ in range(p)]
+        if backend == "jax":
+            return cls(models, "jax", jbank=cls._initial_carry(models))
+        if backend in ("numpy", "scalar"):
+            return cls(models, backend)
+        raise ValueError(f"unknown backend {backend!r}")
+
+    @classmethod
+    def from_bank(cls, bank: ModelBank) -> "SpeedStore":
+        """Wrap an existing numpy bank (no scalar mirror until needed)."""
+        return cls(None, "numpy", bank=bank)
+
+    @classmethod
+    def from_jax_bank(cls, jbank) -> "SpeedStore":
+        """Wrap an existing device bank (no scalar mirror until needed)."""
+        return cls(None, "jax", jbank=jbank)
+
+    @classmethod
+    def resolve(cls, source, *, backend: str = "numpy", vectorize: bool = True) -> "SpeedStore":
+        """Adapt any legacy ``models`` argument — scalar sequence,
+        ``ModelBank``, ``JaxModelBank``, or an existing store — mirroring the
+        per-call dispatch the free functions used to re-derive."""
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
+        if isinstance(source, cls):
+            return source
+        if getattr(source, "is_jax", False):
+            if backend == "jax" and vectorize:
+                if source.xs.ndim != 2:
+                    raise ValueError(
+                        "stacked [q, p, k] banks don't fit the flat List[int] "
+                        "contract; use JaxModelBank.partition_units / "
+                        "Scheduler.repartition_grid for batched partitions"
+                    )
+                return cls.from_jax_bank(source)
+            bank = source.to_bank()
+            if not vectorize:
+                return cls(bank.to_models(), "scalar")
+            return cls.from_bank(bank)
+        if isinstance(source, ModelBank):
+            if not vectorize:
+                return cls(source.to_models(), "scalar")
+            if backend == "jax":
+                from .modelbank_jax import JaxModelBank
+
+                return cls(None, "jax", jbank=JaxModelBank.from_bank(source))
+            return cls.from_bank(source)
+        models = list(source)
+        if not vectorize:
+            return cls(models, "scalar")
+        return cls.from_models(models, backend=backend)
+
+    # -- shape / access ------------------------------------------------------
+
+    @property
+    def p(self) -> int:
+        if self._models is not None:
+            return len(self._models)
+        if self._np_bank is not None:
+            return self._np_bank.p
+        return self._jbank.p
+
+    def __len__(self) -> int:
+        return self.p
+
+    @property
+    def models(self) -> List[SpeedModel]:
+        """The live scalar estimates (materialized from the bank if the store
+        was built as a pure bank wrapper)."""
+        self._ensure_models()
+        return self._models
+
+    def _ensure_models(self) -> None:
+        if self._models is not None:
+            return
+        if self._np_bank is not None:
+            self._models = self._np_bank.to_models()
+        else:
+            self._models = self._jbank.to_bank().to_models()
+
+    def to_models(self) -> List[SpeedModel]:
+        return list(self.models)
+
+    @property
+    def num_points(self) -> List[int]:
+        """Observed points per model; models without a piecewise
+        representation (``AnalyticModel``, ``ConstantModel``) count as 1 —
+        they are always evaluable."""
+        if self._models is not None:
+            return [getattr(m, "num_points", 1) for m in self._models]
+        return [int(c) for c in np.asarray(self.bank().counts)]
+
+    def bank(self) -> ModelBank:
+        """Numpy-bank snapshot of the current estimates (rebuilt from the
+        scalar models, exactly like the legacy per-call banking)."""
+        if self._models is None:
+            if self._np_bank is not None:
+                return self._np_bank
+            return self._jbank.to_bank()
+        return ModelBank.from_models(self._models)
+
+    def _carry(self):
+        """The jax device carry; rebuilt lazily from the scalar models after
+        an invalidation (straggler reprofile), exactly like the legacy
+        ``BalanceController._carry_bank``."""
+        if self._jbank is None:
+            self._jbank = self._initial_carry(self._models)
+        return self._jbank
+
+    def device_bank(self, *, snapshot: bool = True):
+        """``JaxModelBank`` view.  On the jax backend this is the
+        incrementally maintained carry; otherwise built from the models on
+        demand.  With ``snapshot=True`` the result is copied on platforms
+        where ``fold_in`` donates its carry, so later folds cannot invalidate
+        the caller's reference."""
+        from .modelbank_jax import DONATES_CARRY, JaxModelBank
+
+        if self.backend == "jax":
+            jb = self._carry()
+        elif self._np_bank is not None and self._models is None:
+            jb = JaxModelBank.from_bank(self._np_bank)
+        else:
+            jb = JaxModelBank.from_models(self.models)
+        return jb.copy() if (snapshot and DONATES_CARRY) else jb
+
+    def drop_carry(self) -> None:
+        """Invalidate the device carry (rebuilt lazily from the models)."""
+        self._ensure_models()
+        self._jbank = None
+
+    # -- the model-query protocol --------------------------------------------
+
+    def speeds(self, x) -> np.ndarray:
+        """Batched ``s_i(x_i)`` as a host ``[p]`` array (NaN on empty rows)."""
+        if self.backend == "jax":
+            return np.asarray(self._carry().speed(np.asarray(x, dtype=np.float64)))
+        if self.backend == "numpy":
+            return self.bank().speed(x)
+        x = np.broadcast_to(np.asarray(x, dtype=np.float64), (self.p,))
+        out = np.empty(self.p, dtype=np.float64)
+        for i, m in enumerate(self.models):
+            if getattr(m, "num_points", 1) == 0:
+                out[i] = np.nan
+            else:
+                out[i] = m.speed(float(x[i]))
+        return out
+
+    def times(self, x) -> np.ndarray:
+        """Batched ``t_i(x_i) = x_i / s_i(x_i)`` (0 for non-positive x)."""
+        if self.backend == "jax":
+            return np.asarray(self._carry().time(np.asarray(x, dtype=np.float64)))
+        if self.backend == "numpy":
+            return self.bank().time(x)
+        x = np.broadcast_to(np.asarray(x, dtype=np.float64), (self.p,))
+        out = np.empty(self.p, dtype=np.float64)
+        for i, m in enumerate(self.models):
+            if getattr(m, "num_points", 1) == 0:
+                out[i] = np.nan if x[i] > 0 else 0.0
+            else:
+                out[i] = m.time(float(x[i]))
+        return out
+
+    def alloc_at_time(self, t: float, caps) -> np.ndarray:
+        """Batched ``max { x in [0, cap_i] : x / s_i(x) <= t }``."""
+        if self.backend == "jax":
+            return np.asarray(
+                self._carry().alloc_at_time(t, np.asarray(caps, dtype=np.float64))
+            )
+        if self.backend == "numpy":
+            return self.bank().alloc_at_time(t, caps)
+        caps = np.broadcast_to(np.asarray(caps, dtype=np.float64), (self.p,))
+        return np.asarray(
+            [m.alloc_at_time(t, float(c)) for m, c in zip(self.models, caps)]
+        )
+
+    # -- observation fold-in -------------------------------------------------
+
+    def fold_in(self, x, s, valid: Optional[Sequence[bool]] = None) -> "SpeedStore":
+        """Insert one observation ``(x_i, s_i)`` per processor (the paper's
+        step-5 model update) into the scalar estimates and, on the jax
+        backend, into the device carry — one vectorized sorted insert instead
+        of a host rebuild.  Rows with ``valid[i] == False`` are untouched.
+        Mutates the store in place and returns it."""
+        self._ensure_models()
+        xs = [float(v) for v in np.broadcast_to(np.asarray(x, dtype=np.float64), (self.p,))]
+        ss = [float(v) for v in np.broadcast_to(np.asarray(s, dtype=np.float64), (self.p,))]
+        vv = (
+            [bool(v) for v in np.broadcast_to(np.asarray(valid, dtype=bool), (self.p,))]
+            if valid is not None
+            else [True] * self.p
+        )
+        for i, (xi, si, ok) in enumerate(zip(xs, ss, vv)):
+            if ok:
+                self._models[i].add_point(xi, si)
+        if self.backend == "jax":
+            self._jbank = self._carry().fold_in(xs, ss, vv)
+        return self
+
+    def reset_row(self, i: int, points: Sequence[Tuple[float, float]] = ()) -> None:
+        """Replace processor ``i``'s estimate (straggler reprofile: keep only
+        the supplied points, typically the freshest operating point).  The
+        device carry is dropped and rebuilt lazily."""
+        self._ensure_models()
+        self._models[i] = (
+            PiecewiseLinearFPM.from_points(points) if points else PiecewiseLinearFPM()
+        )
+        self._jbank = None
+
+    # -- the partitioners (backend pre-resolved) ------------------------------
+
+    def partition_continuous(
+        self, n: float, caps=None, *, rel_tol: float = 1e-12, max_steps: int = 200
+    ) -> Tuple[List[float], float]:
+        """Continuous optimal partition (allocations, t*)."""
+        p = self.p
+        if p == 0:
+            raise ValueError("no processors")
+        if n <= 0:
+            return [0.0] * p, 0.0
+        if self.backend == "jax":
+            caps_l = _prep_continuous_caps(p, float(n), caps)
+            xs, t_star = self._carry().partition_continuous(
+                float(n), caps_l, rel_tol=rel_tol, max_steps=max_steps
+            )
+            return [float(v) for v in xs], float(t_star)
+        if self.backend == "numpy":
+            return _continuous_bank(self.bank(), float(n), caps, rel_tol=rel_tol, max_steps=max_steps)
+        return _continuous_scalar(self.models, float(n), caps, rel_tol=rel_tol, max_steps=max_steps)
+
+    def partition_units(self, n: int, caps=None, *, min_units: int = 0) -> List[int]:
+        """Integer partition of ``n`` units (allocations only)."""
+        return self.partition(n, caps, min_units=min_units)[0]
+
+    def partition(self, n: int, caps=None, *, min_units: int = 0) -> Tuple[List[int], float]:
+        """Integer partition plus the continuous solve's ``t*`` (free — the
+        unit partition bisects it anyway)."""
+        p = self.p
+        icaps = _prep_unit_caps(p, n, caps, min_units)
+        if self.backend == "jax":
+            d, t_star = self._carry().partition_units(
+                n, icaps, min_units=min_units, with_t=True
+            )
+            return [int(v) for v in d], float(t_star)
+        if self.backend == "numpy":
+            return _partition_units_bank(self.bank(), n, icaps, min_units=min_units)
+        return _partition_units_scalar(self.models, n, icaps, min_units=min_units)
+
+    # -- derived metrics ------------------------------------------------------
+
+    def imbalance_estimate(self, d: Sequence[int]) -> float:
+        """Predicted imbalance of distribution ``d`` under the current
+        estimates (groups without points or units are ignored)."""
+        pts = self.num_points
+        ts = [
+            float(t)
+            for t, di, k in zip(self.times([float(v) for v in d]), d, pts)
+            if di > 0 and k > 0 and np.isfinite(t)
+        ]
+        return imbalance(ts)
+
+    # -- persistence ----------------------------------------------------------
+
+    def state_dict(self) -> Dict:
+        """Checkpointable estimates.  Raises ``TypeError`` for models with no
+        piecewise representation (sample-and-bank them first)."""
+        points = []
+        for m in self.models:
+            if not hasattr(m, "as_points"):
+                if isinstance(m, ConstantModel):
+                    points.append([(1.0, float(m.s))])
+                    continue
+                raise TypeError(
+                    f"{type(m).__name__} has no piecewise representation; "
+                    "build the store with analytic_tol to sample-and-bank it"
+                )
+            points.append([(float(x), float(s)) for x, s in m.as_points()])
+        return {"backend": self.backend, "points": points}
+
+    @classmethod
+    def from_state(cls, state: Dict, *, backend: Optional[str] = None) -> "SpeedStore":
+        models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
+        return cls.from_models(models, backend=backend or state.get("backend", "numpy"))

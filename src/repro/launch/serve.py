@@ -63,9 +63,9 @@ def main(argv=None):
             return t
 
         disp = ReplicaDispatcher(replica_run, args.replicas, eps=0.1)
-        res = disp.balance(args.chunks)
+        res = disp.balance(args.chunks)  # Partition, via the Scheduler facade
         print(
-            f"DFPA dispatch over {args.replicas} replicas: d={res.d} "
+            f"DFPA dispatch over {args.replicas} replicas: d={res.allocations} "
             f"iters={res.iterations} imb={res.imbalance:.3f} converged={res.converged}"
         )
 

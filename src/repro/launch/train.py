@@ -28,9 +28,9 @@ import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..checkpoint import CheckpointManager, load_checkpoint
+from ..core.scheduler import Scheduler
 from ..data import SyntheticLMData, UnitBatcher
 from ..optim.schedule import warmup_cosine
-from ..runtime.balance import BalanceController
 from ..runtime.straggler import StragglerAction, StragglerDetector
 from ..runtime.train_loop import init_train_state, make_train_step
 
@@ -73,8 +73,12 @@ def train_hetero(cfg, *, steps: int, groups: int, hetero: List[float], n_units: 
     sched = warmup_cosine(lr, max(steps // 10, 1), steps)
     data = SyntheticLMData(cfg, micro_batch, seq)
     batcher = UnitBatcher(data, micro_batch)
-    ctrl = BalanceController(n_units=n_units, num_groups=groups, eps=eps)
-    det = StragglerDetector()
+    # One Scheduler session drives the whole control plane: online DFPA
+    # observation, repartitioning, and straggler reprofiling.
+    ctrl = Scheduler(
+        n_units=n_units, num_groups=groups, eps=eps, min_units=1,
+        detector=StragglerDetector(),
+    )
     # One jit'd step per distinct accumulation length (shared cache).
     step_fns: Dict[int, object] = {}
 
@@ -105,11 +109,12 @@ def train_hetero(cfg, *, steps: int, groups: int, hetero: List[float], n_units: 
                 new_state = out_state  # groups' grads averaged in production;
                 # single-device emulation keeps one group's update
         state = new_state
-        # straggler scan BEFORE folding times into the models
-        for g in range(groups):
-            act = det.update(g, ctrl.models[g], ctrl.d[g], times[g])
-            if act is StragglerAction.REPROFILE:
-                det.reprofile(ctrl, g)
+        # straggler scan BEFORE folding times into the models (REPROFILE
+        # actions are applied by the facade automatically)
+        acts = ctrl.straggler_actions(times)
+        for g, act in enumerate(acts):
+            if act is not StragglerAction.NONE:
+                print(f"    straggler[{g}]: {act.value}", flush=True)
         changed = ctrl.observe(times)
         print(
             f"step {i:3d} loss {np.mean(losses):7.4f} times "

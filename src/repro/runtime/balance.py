@@ -1,19 +1,26 @@
 """BalanceController: the paper's DFPA running ONLINE inside training.
 
+.. deprecated::
+    The online loop now lives on the facade —
+    :class:`repro.core.scheduler.Scheduler` (``observe`` / ``repartition`` /
+    ``state_dict``) — with the model estimates in a ``SpeedStore`` whose
+    backend is resolved once at construction.  ``BalanceController`` remains
+    as a thin wrapper that delegates every method to an internal
+    ``Scheduler`` (``observe``/``bank``/``device_bank`` emit
+    ``DeprecationWarning``); behaviour is unchanged, including the jax
+    device-resident carry.
+
 The paper runs dedicated benchmark rounds; in a training loop every global
 step already measures exactly what DFPA needs — ``t_i(d_i)`` for the current
-distribution — so probing is FREE (beyond-paper integration; flagged in
-DESIGN.md).  The controller:
+distribution — so probing is FREE.  The controller:
 
   1. starts from the even distribution (or a warm start from checkpointed
      FPM points after an elastic event);
   2. after each global step, folds the observed per-group times into the
      piecewise-linear FPM estimates (the paper's step 5);
   3. when the imbalance exceeds ``eps``, re-partitions the units with the
-     geometric algorithm of [16] (the paper's step 3) — next step runs the
-     new distribution;
-  4. exposes its FPM points for checkpointing (self-adaptability across
-     restarts) and for the straggler detector.
+     geometric algorithm of [16] (the paper's step 3);
+  4. exposes its FPM points for checkpointing and the straggler detector.
 
 EMA smoothing (``smooth``) de-noises wall-clock measurements — the paper's
 deterministic-benchmark assumption does not hold for real step times.
@@ -22,12 +29,13 @@ deterministic-benchmark assumption does not hold for real step times.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
-from ..core.fpm import PiecewiseLinearFPM, imbalance
+from ..core.fpm import PiecewiseLinearFPM
 from ..core.modelbank import ModelBank
-from ..core.partition import partition_units
+from ..core.scheduler import Policy, Scheduler
+from ..core.speedstore import SpeedStore, _warn_legacy
 
 __all__ = ["BalanceController", "GroupTimer"]
 
@@ -46,130 +54,178 @@ class GroupTimer:
         return time.perf_counter() - self._t0
 
 
-@dataclass
 class BalanceController:
-    n_units: int  # units per global step (microbatches)
-    num_groups: int
-    eps: float = 0.1
-    min_units: int = 1
-    smooth: float = 0.5  # EMA weight of the newest observation
-    caps: Optional[Sequence[int]] = None  # per-group HBM unit capacity
-    backend: str = "numpy"  # "jax": device-resident bank + jitted partitioner
+    """Legacy online-DFPA controller; now a shim over ``Scheduler``."""
 
-    models: List[PiecewiseLinearFPM] = field(default_factory=list)
-    d: List[int] = field(default_factory=list)
-    _ema: Dict[Tuple[int, int], float] = field(default_factory=dict)
-    _device_bank: Optional[object] = field(default=None, repr=False)
-    rebalances: int = 0
-    steps_observed: int = 0
+    def __init__(
+        self,
+        n_units: int,
+        num_groups: int,
+        eps: float = 0.1,
+        min_units: int = 1,
+        smooth: float = 0.5,
+        caps: Optional[Sequence[int]] = None,
+        backend: str = "numpy",
+        models: Optional[List[PiecewiseLinearFPM]] = None,
+        d: Optional[List[int]] = None,
+    ):
+        store = (
+            SpeedStore.from_models(models, backend=backend)
+            if models
+            else SpeedStore.empty(num_groups, backend=backend)
+        )
+        self._sched = Scheduler(
+            store,
+            policy=Policy.DFPA,
+            n_units=n_units,
+            eps=eps,
+            min_units=min_units,
+            caps=caps,
+            smooth=smooth,
+            backend=backend,
+        )
+        if d:
+            self._sched.d = list(d)
 
-    def __post_init__(self):
-        if not self.models:
-            self.models = [PiecewiseLinearFPM() for _ in range(self.num_groups)]
-        if not self.d:
-            base, rem = divmod(self.n_units, self.num_groups)
-            self.d = [base + (1 if i < rem else 0) for i in range(self.num_groups)]
+    @classmethod
+    def _wrap(cls, sched: Scheduler) -> "BalanceController":
+        """Adopt an existing Scheduler without re-initialising (the elastic
+        shim's path)."""
+        self = object.__new__(cls)
+        self._sched = sched
+        return self
+
+    # -- delegated configuration / state --------------------------------------
+
+    @property
+    def n_units(self) -> int:
+        return self._sched.n_units
+
+    @property
+    def num_groups(self) -> int:
+        return self._sched.num_groups
+
+    @property
+    def eps(self) -> float:
+        return self._sched.eps
+
+    @property
+    def min_units(self) -> int:
+        return self._sched.min_units
+
+    @property
+    def smooth(self) -> float:
+        return self._sched.smooth
+
+    @property
+    def caps(self):
+        return self._sched.caps
+
+    @property
+    def backend(self) -> str:
+        return self._sched.backend
+
+    @property
+    def models(self) -> List[PiecewiseLinearFPM]:
+        return self._sched.store.models
+
+    @property
+    def d(self) -> List[int]:
+        return self._sched.d
+
+    @d.setter
+    def d(self, value) -> None:
+        self._sched.d = list(value)
+
+    @property
+    def rebalances(self) -> int:
+        return self._sched.rebalances
+
+    @property
+    def steps_observed(self) -> int:
+        return self._sched.steps_observed
+
+    @property
+    def _ema(self) -> Dict:
+        return self._sched._ema
+
+    @property
+    def _device_bank(self):
+        return self._sched.store._jbank
+
+    @_device_bank.setter
+    def _device_bank(self, value) -> None:
+        self._sched.store._jbank = value
 
     # -- the online DFPA loop -------------------------------------------------
 
     def observe(self, times: Sequence[float]) -> bool:
         """Fold one global step's per-group times in; returns True if the
-        distribution changed (callers must re-split the next step's units)."""
-        if len(times) != self.num_groups:
-            raise ValueError("times length != num_groups")
-        self.steps_observed += 1
-        speeds = [1.0] * self.num_groups
-        valid = [False] * self.num_groups
-        for i, (di, ti) in enumerate(zip(self.d, times)):
-            if di <= 0 or ti <= 0:
-                continue
-            key = (i, di)
-            ema = self._ema.get(key)
-            ema = ti if ema is None else (1 - self.smooth) * ema + self.smooth * ti
-            self._ema[key] = ema
-            self.models[i].add_point(float(di), di / ema)
-            speeds[i], valid[i] = di / ema, True
-        if self.backend == "jax":
-            # Fold the EMA-smoothed operating points into the device carry
-            # (duplicate d_i replaces the speed, exactly like add_point) —
-            # the jitted partitioner below reads the bank without a rebuild.
-            self._device_bank = self._carry_bank().fold_in(
-                [float(di) for di in self.d], speeds, valid
-            )
-        if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
-            return False
-        src = (
-            self._device_bank
-            if self.backend == "jax" and self._device_bank is not None
-            else self.models
-        )
-        new_d = partition_units(
-            src, self.n_units, self.caps,
-            min_units=self.min_units, backend=self.backend,
-        )
-        if new_d == self.d:
-            return False
-        self.d = new_d
-        self.rebalances += 1
-        return True
+        distribution changed.
+
+        .. deprecated:: use ``Scheduler.observe``.
+        """
+        _warn_legacy("BalanceController.observe()", "Scheduler.observe()")
+        return self._sched.observe(times)
 
     def bank(self) -> ModelBank:
         """Batched snapshot of the current per-group FPM estimates.
 
-        Rebuilt on demand (the estimates mutate every observed step);
-        fleet-wide consumers — e.g. ``StragglerDetector.update_batch`` —
-        use this instead of looping over the scalar models.
+        .. deprecated:: use ``Scheduler.store.bank()``.
         """
-        return ModelBank.from_models(self.models)
+        _warn_legacy("BalanceController.bank()", "SpeedStore.bank()")
+        return self._sched.store.bank()
 
     def _carry_bank(self):
         """The internal fold-in carry (donation-eligible: its buffers may be
         consumed by the next ``observe``)."""
-        if self._device_bank is not None:
-            return self._device_bank
-        from ..core.modelbank_jax import JaxModelBank
-
-        if any(m.num_points > 0 for m in self.models):
-            return JaxModelBank.from_models(self.models)
-        return JaxModelBank.empty(self.num_groups)
+        return self._sched.store._carry()
 
     def device_bank(self):
         """The ``JaxModelBank`` snapshot the jitted partitioner consumes.
 
-        With ``backend="jax"`` this is the incrementally maintained device
-        carry (observations folded in each step); otherwise it is built from
-        the scalar models on demand.  Either way the controller can hand it
-        straight to ``partition_units(..., backend="jax")``.  On platforms
-        where the fold-in donates its carry the snapshot is a copy, so the
-        next ``observe`` cannot invalidate the caller's reference.
+        .. deprecated:: use ``Scheduler.store.device_bank()``.
         """
-        from ..core.modelbank_jax import DONATES_CARRY
+        _warn_legacy("BalanceController.device_bank()", "SpeedStore.device_bank()")
+        return self._sched.store.device_bank()
 
-        bank = self._carry_bank()
-        return bank.copy() if DONATES_CARRY else bank
+    def reprofile(self, group: int) -> None:
+        """Invalidate a group's FPM estimate (straggler recovery)."""
+        self._sched.reprofile(group)
 
     @property
     def imbalance_estimate(self) -> float:
-        ts = [m.time(di) for m, di in zip(self.models, self.d) if di > 0 and m.num_points]
-        return imbalance(ts)
+        return self._sched.imbalance_estimate
 
     # -- persistence (self-adaptability across restarts) ----------------------
 
     def state_dict(self) -> Dict:
-        return {
-            "n_units": self.n_units,
-            "d": list(self.d),
-            "points": [m.as_points() for m in self.models],
-        }
+        """Full config + estimates (the legacy keys ``n_units``/``d``/
+        ``points`` survive; ``backend``/``smooth``/``eps``/``min_units``/
+        ``caps`` now round-trip too — the state-asymmetry fix)."""
+        return self._sched.state_dict()
 
     @classmethod
-    def from_state(cls, state: Dict, *, eps: float = 0.1, **kw) -> "BalanceController":
+    def from_state(cls, state: Dict, *, eps: Optional[float] = None, **kw) -> "BalanceController":
         models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
-        return cls(
+        cfg = dict(
+            eps=state.get("eps", 0.1) if eps is None else eps,
+            min_units=state.get("min_units", 1),
+            smooth=state.get("smooth", 0.5),
+            caps=state.get("caps"),
+            backend=state.get("backend", "numpy"),
+        )
+        cfg.update(kw)
+        self = cls(
             n_units=state["n_units"],
             num_groups=len(models),
-            eps=eps,
             models=models,
             d=list(state["d"]),
-            **kw,
+            **cfg,
         )
+        self._sched._ema = {
+            (int(g), int(du)): float(v) for g, du, v in state.get("ema", [])
+        }
+        self._sched.rebalances = int(state.get("rebalances", 0))
+        self._sched.steps_observed = int(state.get("steps_observed", 0))
+        return self

@@ -1,20 +1,21 @@
 """Elastic scaling: group join/leave -> warm-started DFPA re-partition.
 
-The paper's key enabler for self-adaptability is that DFPA needs no prior
-model — and its partial estimates are CHEAP to carry.  On a membership
-change we keep the surviving groups' FPM points (the paper's §3.2 trick of
-reusing all previous benchmark results) and re-partition immediately;
-convergence then typically takes 1-2 observation steps instead of a cold
-start.  A joining group starts with an optimistic single-point estimate
-borrowed from the fastest survivor (it will be corrected by its first
-measurement; optimistic starts avoid starving the newcomer).
+.. deprecated::
+    Elastic membership now lives on the facade —
+    :meth:`repro.core.scheduler.Scheduler.join` /
+    :meth:`~repro.core.scheduler.Scheduler.leave` /
+    :meth:`~repro.core.scheduler.Scheduler.resize` — which keep the
+    survivors' FPM points (the paper's §3.2 trick of reusing all previous
+    benchmark results), seed joiners from the fastest survivor's estimate,
+    and re-partition immediately.  :func:`elastic_rebalance` remains as a
+    thin shim delegating to ``Scheduler.resize``.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-from ..core.fpm import PiecewiseLinearFPM
+from ..core.speedstore import _warn_legacy
 from .balance import BalanceController
 
 __all__ = ["elastic_rebalance"]
@@ -31,33 +32,10 @@ def elastic_rebalance(
 
     ``surviving`` — indices (into the old controller) still alive;
     ``joined``    — number of new groups appended after the survivors.
-    """
-    models: List[PiecewiseLinearFPM] = [
-        PiecewiseLinearFPM.from_points(controller.models[i].as_points())
-        for i in surviving
-    ]
-    donor = None
-    for m in models:
-        if m.num_points:
-            cand = max(m.as_points(), key=lambda p: p[1])
-            if donor is None or cand[1] > donor[1]:
-                donor = cand
-    for _ in range(joined):
-        models.append(
-            PiecewiseLinearFPM.from_points([donor]) if donor else PiecewiseLinearFPM()
-        )
-    new = BalanceController(
-        n_units=controller.n_units,
-        num_groups=len(models),
-        eps=controller.eps,
-        min_units=controller.min_units,
-        smooth=controller.smooth,
-        caps=list(caps) if caps is not None else None,
-        models=models,
-    )
-    # Re-partition immediately if every group has at least one point.
-    if all(m.num_points for m in new.models):
-        from ..core.partition import partition_units
 
-        new.d = partition_units(new.models, new.n_units, new.caps, min_units=new.min_units)
-    return new
+    .. deprecated:: use ``Scheduler.resize`` (or the in-place
+       ``Scheduler.join`` / ``Scheduler.leave``).
+    """
+    _warn_legacy("elastic_rebalance()", "Scheduler.resize()/join()/leave()")
+    sched = controller._sched if isinstance(controller, BalanceController) else controller
+    return BalanceController._wrap(sched.resize(surviving, joined=joined, caps=caps))

@@ -17,8 +17,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.dfpa import DFPAResult, dfpa
 from ..core.executor import Executor, RoundLog
+from ..core.scheduler import Partition, Policy, Scheduler
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_cache, prefill
 
@@ -65,13 +65,17 @@ class ReplicaDispatcher:
     """DFPA over request chunks across heterogeneous serving replicas.
 
     ``replica_run(i, x)`` must process ``x`` request chunks on replica ``i``
-    and return the wall time (real engines or simulators both fit).
+    and return the wall time (real engines or simulators both fit).  The
+    dispatcher is an ``Executor``; :meth:`balance` drives it through the
+    ``Scheduler`` facade and leaves the warm session on ``self.scheduler``
+    for the online lifecycle (``observe`` / ``join`` / ``leave``).
     """
 
     replica_run: Callable[[int, int], float]
     num_replicas: int
     eps: float = 0.1
     logs: List[RoundLog] = field(default_factory=list)
+    scheduler: Optional[Scheduler] = None
 
     @property
     def num_procs(self) -> int:
@@ -87,6 +91,9 @@ class ReplicaDispatcher:
     def round_cost(self, times: Sequence[float]) -> float:
         return max(times)
 
-    def balance(self, n_chunks: int, **kw) -> DFPAResult:
-        """Find the balanced chunk distribution for this fleet."""
-        return dfpa(self, n_chunks, self.eps, **kw)
+    def balance(self, n_chunks: int, **kw) -> Partition:
+        """Find the balanced chunk distribution for this fleet (the DFPA
+        measurement loop, via the facade)."""
+        if self.scheduler is None:
+            self.scheduler = Scheduler(policy=Policy.DFPA, eps=self.eps)
+        return self.scheduler.autotune(self, n_chunks, self.eps, **kw)

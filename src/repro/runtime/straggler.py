@@ -102,7 +102,15 @@ class StragglerDetector:
 
     def reprofile(self, controller, group: int) -> None:
         """Invalidate a group's FPM (keep only the freshest operating point
-        so the partitioner stays feasible)."""
+        so the partitioner stays feasible).
+
+        ``Scheduler`` / ``BalanceController`` implement this themselves
+        (``Scheduler.reprofile``; wired automatically by
+        ``Scheduler.straggler_actions``) — delegate when available, keep the
+        legacy in-place mutation for duck-typed controllers."""
+        if hasattr(controller, "reprofile"):
+            controller.reprofile(group)
+            return
         m = controller.models[group]
         if m.num_points > 1:
             # keep the most recent point at the current allocation if present

@@ -1,0 +1,176 @@
+"""Deprecation shims: every legacy entry point still works AND warns.
+
+Each shim must (a) emit ``DeprecationWarning`` pointing at the facade, and
+(b) produce results identical to calling the facade directly — they are thin
+delegations, not parallel implementations.  Runs in CI under
+``-W error::DeprecationWarning`` (``pytest.deprecated_call`` records the
+warning before the filter can raise), which simultaneously proves the
+*facade* paths underneath never touch the shimmed API themselves.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnalyticModel,
+    HCL_SPECS,
+    Policy,
+    Scheduler,
+    SimulatedExecutor,
+    SpeedStore,
+    speed_fn_2d,
+)
+from repro.core.fpm import PiecewiseLinearFPM
+
+
+def _models(p=4, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(p):
+        xs = np.sort(rng.uniform(1.0, 1e3, 4))
+        ss = rng.uniform(1.0, 50.0, 4)
+        out.append(PiecewiseLinearFPM.from_points(list(zip(xs, ss))))
+    return out
+
+
+def test_partition_units_shim_warns_and_delegates():
+    from repro.core import partition_units
+
+    models = _models()
+    with pytest.deprecated_call(match="partition_units"):
+        d = partition_units(models, 100, min_units=1)
+    assert d == SpeedStore.from_models(models).partition_units(100, min_units=1)
+
+
+def test_partition_continuous_shim_warns_and_delegates():
+    from repro.core import partition_continuous
+
+    models = _models()
+    with pytest.deprecated_call(match="partition_continuous"):
+        xs, t = partition_continuous(models, 100.0)
+    xs2, t2 = SpeedStore.from_models(models).partition_continuous(100.0)
+    assert xs == xs2 and t == t2
+
+
+def test_cpm_partition_shim_warns_and_delegates():
+    from repro.core import cpm_partition
+
+    with pytest.deprecated_call(match="cpm_partition"):
+        d = cpm_partition([1.0, 2.0, 3.0], 60)
+    assert d == Scheduler.from_speeds([1.0, 2.0, 3.0]).partition(60).allocations
+
+
+def test_dfpa_shim_warns_and_delegates():
+    from repro.core import dfpa
+
+    fns = [lambda x: x / 10.0, lambda x: x / 20.0, lambda x: x / 5.0]
+    with pytest.deprecated_call(match="dfpa"):
+        res = dfpa(SimulatedExecutor(time_fns=list(fns)), 300, 0.05, min_units=1)
+    part = Scheduler().autotune(
+        SimulatedExecutor(time_fns=list(fns)), 300, 0.05, min_units=1
+    )
+    assert res.d == part.allocations
+    assert res.iterations == part.iterations
+    assert res.history == part.diagnostics["history"]
+    assert res.points_per_proc == [m.num_points for m in part.diagnostics["models"]]
+
+
+def test_grid_shims_warn_and_delegate():
+    from repro.core import cpm_partition_2d, dfpa_partition_2d, ffmpa_partition_2d
+
+    p, q, M, N = 2, 2, 64, 64
+    specs = HCL_SPECS[: p * q]
+    grid = [[speed_fn_2d(specs[i * q + j]) for j in range(q)] for i in range(p)]
+
+    with pytest.deprecated_call(match="dfpa_partition_2d"):
+        df = dfpa_partition_2d(grid, M, N, eps=0.1)
+    part = Scheduler(grid=grid, policy=Policy.GRID2D).partition_grid(M, N, eps=0.1)
+    assert df.row_heights == part.row_heights
+    assert df.col_widths == part.col_widths
+
+    with pytest.deprecated_call(match="cpm_partition_2d"):
+        cpm, cost = cpm_partition_2d(grid, M, N)
+    cpm_part = Scheduler(grid=grid, policy=Policy.CPM).partition_grid(M, N)
+    assert cpm.row_heights == cpm_part.row_heights
+    assert cost == pytest.approx(cpm_part.diagnostics["bench_cost"])
+
+    with pytest.deprecated_call(match="ffmpa_partition_2d"):
+        ff = ffmpa_partition_2d(grid, M, N, eps=0.1)
+    ff_part = Scheduler(grid=grid, policy=Policy.FFMPA).partition_grid(
+        M, N, eps=0.1, max_outer=50
+    )
+    assert ff.row_heights == ff_part.row_heights
+
+
+def test_bank_repartition_2d_shim_warns_and_delegates():
+    from repro.core import bank_repartition_2d
+
+    p, q, M = 3, 2, 60
+    rng = np.random.default_rng(2)
+    widths = [20, 22]
+    fpms = [[PiecewiseLinearFPM() for _ in range(q)] for _ in range(p)]
+    fpm_width = [[None] * q for _ in range(p)]
+    for i in range(p):
+        for j in range(q):
+            for r in rng.uniform(2, M, 3):
+                fpms[i][j].add_point(float(r), float(rng.uniform(1.0, 9.0)))
+            fpm_width[i][j] = widths[j]
+    with pytest.deprecated_call(match="bank_repartition_2d"):
+        rows = bank_repartition_2d(fpms, fpm_width, widths, M)
+    want = Scheduler(policy=Policy.GRID2D).repartition_grid(fpms, fpm_width, widths, M)
+    assert rows == want
+
+
+def test_balance_controller_shims_warn():
+    from repro.runtime.balance import BalanceController
+
+    ctrl = BalanceController(n_units=32, num_groups=2, eps=0.05, smooth=1.0)
+    with pytest.deprecated_call(match="observe"):
+        ctrl.observe([2.0, 1.0])
+    with pytest.deprecated_call(match="bank"):
+        bank = ctrl.bank()
+    assert bank.p == 2
+    with pytest.deprecated_call(match="device_bank"):
+        jb = ctrl.device_bank()
+    assert jb.p == 2
+
+
+def test_elastic_rebalance_shim_warns_and_delegates():
+    from repro.runtime.balance import BalanceController
+    from repro.runtime.elastic import elastic_rebalance
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        ctrl = BalanceController(n_units=60, num_groups=3, eps=0.05, smooth=1.0)
+        for _ in range(8):
+            times = [d / s if d > 0 else 0.0 for d, s in zip(ctrl.d, [1.0, 2.0, 3.0])]
+            ctrl.observe(times)
+    with pytest.deprecated_call(match="elastic_rebalance"):
+        new = elastic_rebalance(ctrl, surviving=[0, 1], joined=1)
+    assert new.num_groups == 3
+    assert sum(new.d) == 60
+    # same semantics as the facade's resize
+    want = ctrl._sched.resize([0, 1], joined=1, caps=None)
+    assert new.d == want.d
+
+
+def test_legacy_flat_call_sites_are_shim_free_inside_facade():
+    """The facade itself must not route through the shims: a full lifecycle
+    raises nothing under error-filtered DeprecationWarning."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sched = Scheduler(n_units=64, num_groups=4, eps=0.05, min_units=1, smooth=1.0)
+        for _ in range(10):
+            times = [d / s if d > 0 else 0.0 for d, s in zip(sched.d, [1, 2, 3, 2])]
+            sched.observe(times)
+        sched.straggler_actions([t or 0.0 for t in sched.store.times(sched.d)])
+        sched.leave(3)
+        sched.join(1)
+        sched.repartition()
+        Scheduler.from_state(sched.state_dict())
+        ffmpa = Scheduler.from_models(
+            [AnalyticModel(lambda x: x / 7.0)] * 3, policy=Policy.FFMPA
+        )
+        ffmpa.partition(30, min_units=1)
