@@ -33,8 +33,12 @@ p >= 1000, the paper's self-adaptability requirement).
 
 A third, on-device representation — ``JaxModelBank`` (``modelbank_jax.py``,
 selected with ``backend="jax"``) — runs the whole ``t*`` bisection and the
-greedy integer completion under ``jax.jit``; it is exported lazily so the
-numpy paths never import jax.
+integer completion under ``jax.jit``; it is exported lazily so the numpy
+paths never import jax.  On monotone-time banks (the host-tracked
+``monotone`` flag) both banked backends route the completion through the
+threshold-count bulk grant — one more bisection instead of ~p/2 sequential
+greedy steps — which is what lets p=10^5 fleets repartition in milliseconds
+(see the "completion modes" section in ``modelbank.py``).
 
 The recommended entry point is the **Scheduler facade** (``scheduler.py``):
 one session object over a ``SpeedStore`` (``speedstore.py``, backend resolved

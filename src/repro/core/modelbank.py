@@ -66,6 +66,44 @@ positive caps), and all three produce allocations that sum exactly to ``n``
 with identical makespans (tie-breaks may place a leftover unit differently
 only between the scalar and banked continuous solvers' float paths).
 
+Completion modes and the monotonicity contract
+----------------------------------------------
+
+The integer completion (placing the ``n - sum(floor(x_i))`` leftover units
+after the continuous solve) has two implementations on the banked backends:
+
+* **per-unit greedy** (``completion="greedy"``) — the semantics reference:
+  each leftover unit goes to the processor minimizing
+  ``(time(d_i + 1), -frac_remainder, index)``; a lazy heap on the numpy
+  bank, a masked lexicographic-argmin ``while_loop`` on the jax bank.
+  Exact for ANY speed estimate, but sequential: ~``p/2`` iterations.
+* **threshold-count** (``completion="threshold"``) — for *monotone-time*
+  banks only: when every row's per-unit time ``x / s_i(x)`` is nondecreasing
+  in ``x``, the greedy processes unit increments in globally sorted
+  ``(time, -rem, index)`` order, so the optimal completion collapses to one
+  more bisection — count units under a candidate time threshold ``t`` via
+  ``floor(alloc_at_time(t))`` (clamped to ``[d_i, cap_i]``), bisect ``t``
+  until ``count(lo) < leftover <= count(hi)``, bulk-grant everything
+  counted at ``lo``, and resolve only the handful of boundary-tied units
+  with the exact greedy.  One ``O(p k)`` pass per bisection step instead of
+  one ``O(p)`` argmin per unit — this is what makes ``p = 10^5`` fleets
+  repartition in milliseconds, and because the boundary remainder runs
+  through the *same* greedy, makespans (and in practice allocations) are
+  bit-identical to the per-unit path.
+* **auto** (the default) — threshold-count iff the bank's ``monotone`` flag
+  holds, per-unit greedy otherwise.  The flag is a host-side ``O(p k)``
+  check recorded lazily on the bank: time is nondecreasing on a linear
+  segment iff its knot times are ordered (``x0 * s1 <= x1 * s0``), so a row
+  is monotone iff its knots are sorted, its speeds positive and finite, and
+  every consecutive knot pair satisfies that inequality.  Adversarial
+  (non-monotone) banks — speed spikes, duplicate-``x`` rows whose replacing
+  speed jumps up — are provably demoted to the exact per-unit loop
+  (``tests/test_completion.py``); forcing ``completion="threshold"`` on
+  such a bank is a benchmark-only override with no exactness guarantee.
+
+The scalar backend always runs its per-unit loop (asking it for
+``"threshold"`` raises ``ValueError``).
+
 Migration: free functions → Scheduler
 -------------------------------------
 
@@ -82,6 +120,11 @@ legacy                                                  facade
                                                         ``    .partition_units(n)``
 ``partition_units(models, n, vectorize=False)``         ``SpeedStore.from_models(models, backend="scalar")``
 ``partition_continuous(models, n)``                     ``store.partition_continuous(n)``
+(per-unit greedy completion, always)                    ``store.partition_units(n, completion=...)``
+                                                        (``"auto"`` routes monotone banks to the
+                                                        threshold-count completion)
+(float64 device bank, always)                           ``SpeedStore.from_models(models, backend="jax",``
+                                                        ``    dtype=np.float32)``
 ``cpm_partition(speeds, n)``                            ``Scheduler.from_speeds(speeds).partition(n)``
 ``dfpa(executor, n, eps, ...)``                         ``Scheduler().autotune(executor, n, eps, ...)``
 ``dfpa_partition_2d(grid, M, N, eps)``                  ``Scheduler(grid=grid, policy=Policy.GRID2D)``
@@ -106,7 +149,7 @@ the banked paths can sample-and-bank via
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -117,6 +160,25 @@ __all__ = ["ModelBank"]
 ArrayLike = Union[float, Sequence[float], np.ndarray]
 
 
+def _monotone_check(xs: np.ndarray, ss: np.ndarray, counts: np.ndarray) -> bool:
+    """Host-side monotone-time check over a padded bank (see
+    :meth:`ModelBank.is_monotone`); one numpy pass, shared with the jax
+    bank's host snapshot path."""
+    k = xs.shape[-1]
+    pts = np.arange(k) < counts[..., None]
+    ok_pts = (xs > 0.0) & np.isfinite(xs) & (ss > 0.0) & np.isfinite(ss)
+    if np.any(pts & ~ok_pts):
+        return False
+    if k >= 2:
+        x0, x1 = xs[..., :-1], xs[..., 1:]
+        s0, s1 = ss[..., :-1], ss[..., 1:]
+        seg = np.arange(k - 1) < (counts - 1)[..., None]
+        ok_seg = (x1 >= x0) & (x0 * s1 <= x1 * s0)
+        if np.any(seg & ~ok_seg):
+            return False
+    return True
+
+
 @dataclass
 class ModelBank:
     """All ``p`` piecewise-linear FPMs as padded arrays (see module docstring)."""
@@ -124,6 +186,9 @@ class ModelBank:
     xs: np.ndarray  # [p, k_max] float64, row-sorted, padding repeats last point
     ss: np.ndarray  # [p, k_max] float64, padded the same way
     counts: np.ndarray  # [p] int64, number of valid points per row
+    # Host-side monotone-time flag (None = unknown, computed lazily by
+    # is_monotone()); routes the threshold-count integer completion.
+    monotone: Optional[bool] = None
 
     # -- construction --------------------------------------------------------
 
@@ -185,6 +250,26 @@ class ModelBank:
     @property
     def num_points(self) -> np.ndarray:
         return self.counts
+
+    # -- monotonicity (threshold-count completion routing) -------------------
+
+    def is_monotone(self) -> bool:
+        """True iff every row's time ``x / s_i(x)`` is nondecreasing on
+        ``[0, inf)`` — the contract under which the threshold-count integer
+        completion is exact (see the module docstring).
+
+        On a linear segment ``s(x) = s0 + m (x - x0)`` the time derivative
+        has the constant sign of ``s0 x1 - s1 x0``, so the whole row is
+        monotone iff its knots are sorted, its speeds positive and finite,
+        and the knot times ``x/s`` are nondecreasing (``x0 s1 <= x1 s0``).
+        The constant extensions outside the observed range are always
+        increasing.  Rows with non-positive / non-finite points (possible
+        only in hand-built banks) demote the bank conservatively.  Computed
+        once per bank, ``O(p k)``, and cached on the ``monotone`` field.
+        """
+        if self.monotone is None:
+            self.monotone = _monotone_check(self.xs, self.ss, self.counts)
+        return self.monotone
 
     # -- batched evaluation --------------------------------------------------
 
@@ -303,9 +388,16 @@ class ModelBank:
 
     def scaled(self, speed_scale: ArrayLike) -> "ModelBank":
         """New bank with every row's speeds multiplied by ``speed_scale[i]``
-        (the 2-D partitioner's column-width rescaling, batched)."""
+        (the 2-D partitioner's column-width rescaling, batched).  A uniform
+        positive per-row scale preserves time-monotonicity, so the cached
+        flag carries over; any other scale resets it to unknown."""
         scale = np.broadcast_to(np.asarray(speed_scale, dtype=np.float64), (self.p,))
-        return ModelBank(xs=self.xs.copy(), ss=self.ss * scale[:, None], counts=self.counts.copy())
+        return ModelBank(
+            xs=self.xs.copy(),
+            ss=self.ss * scale[:, None],
+            counts=self.counts.copy(),
+            monotone=self.monotone if bool(np.all(scale > 0.0)) else None,
+        )
 
     # -- adapters back to the scalar protocol --------------------------------
 

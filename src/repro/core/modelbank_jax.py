@@ -15,7 +15,15 @@ ops.  The ``t*`` search of the geometric partitioner runs entirely on device:
   * the greedy integer completion as a masked lexicographic-argmin pass
     (smallest ``(time(d+1), -frac_remainder, index)``) instead of a Python
     heap — one ``O(p)`` argmin per leftover unit, with only the winning
-    row's key recomputed, mirroring the lazy-heap refresh.
+    row's key recomputed, mirroring the lazy-heap refresh;
+  * for monotone-time banks (the host-tracked ``monotone`` flag, see the
+    "completion modes" section in ``modelbank.py``) the completion instead
+    collapses into ONE more fixed-iteration bisection — count units under a
+    time threshold via ``floor(alloc_at_time)``, bulk-grant below it, and
+    run the argmin loop only for the boundary-tied remainder.  That removes
+    the ~p/2 sequential ``while_loop`` iterations that tied the numpy heap
+    at p=10^4 and is what lets p=10^5 fleets repartition in milliseconds
+    (``benchmarks/partition_scale.py`` completion columns).
 
 Every formula mirrors the numpy implementation expression-for-expression;
 with float64 enabled (``jax.config.update("jax_enable_x64", True)`` or the
@@ -153,6 +161,25 @@ def _total_alloc(xs, ss, counts, t, caps):
     return _alloc_at_time(xs, ss, counts, t, caps).sum(axis=-1)
 
 
+@jax.jit
+def _monotone_check_jit(xs, ss, counts):
+    """Device mirror of ``modelbank._monotone_check`` (same expressions, one
+    scalar out): every row's time is nondecreasing iff knots are sorted,
+    speeds positive/finite, and knot times ordered (``x0 s1 <= x1 s0``)."""
+    k = xs.shape[-1]
+    zero = jnp.asarray(0.0, xs.dtype)
+    pts = jnp.arange(k) < counts[..., None]
+    ok_pts = (xs > zero) & jnp.isfinite(xs) & (ss > zero) & jnp.isfinite(ss)
+    ok = ~jnp.any(pts & ~ok_pts)
+    if k >= 2:
+        x0, x1 = xs[..., :-1], xs[..., 1:]
+        s0, s1 = ss[..., :-1], ss[..., 1:]
+        seg = jnp.arange(k - 1) < (counts - 1)[..., None]
+        ok_seg = (x1 >= x0) & (x0 * s1 <= x1 * s0)
+        ok &= ~jnp.any(seg & ~ok_seg)
+    return ok
+
+
 # ---------------------------------------------------------------------------
 # t* search: masked doubling + fixed-iteration bisection
 # ---------------------------------------------------------------------------
@@ -213,8 +240,69 @@ def _partition_continuous_jit(xs, ss, counts, caps, n, rel_tol, max_steps):
 
 
 # ---------------------------------------------------------------------------
-# Integer partition: floor + masked take-back + masked-argmin completion
+# Integer partition: floor + masked take-back + completion (threshold-count
+# bulk grant for monotone banks, masked-argmin greedy for the remainder)
 # ---------------------------------------------------------------------------
+
+
+def _threshold_prefill(xs, ss, counts, caps_i, d0, leftover, t_star, rel_tol, max_steps):
+    """Batched threshold-count bulk completion (monotone-time banks).
+
+    Expression-for-expression mirror of ``partition._threshold_prefill_bank``:
+    bisect a time threshold ``t`` on ``count(t) = sum(clip(floor(alloc(t)),
+    d0, caps)) - sum(d0)`` with the strict bracket ``count(lo) < leftover <=
+    count(hi)`` (masked doubling bracket from ``t*``, after-update early
+    exit), bulk-grant everything counted at ``lo``, and hand the >=1
+    boundary-tied remainder to the exact greedy.  Leading batch dims are the
+    stacked ``[q, p, k]`` bank's columns; lanes with no leftover pass
+    through untouched.
+    """
+    dt = xs.dtype
+    it = d0.dtype
+    caps_f = caps_i.astype(dt)
+    base_total = d0.sum(axis=-1)
+    active = leftover > 0
+
+    def count(t):
+        a = _alloc_at_time(xs, ss, counts, t, caps_f)
+        g = jnp.clip(jnp.floor(a).astype(it), d0, caps_i)
+        return g.sum(axis=-1) - base_total, g
+
+    hi = jnp.maximum(t_star, jnp.asarray(1e-9, dt))
+
+    def _need(hi):
+        c, _ = count(hi)
+        return active & (c < leftover)
+
+    def dbl_cond(carry):
+        hi, i = carry
+        return jnp.any(_need(hi)) & (i < 200)
+
+    def dbl_body(carry):
+        hi, i = carry
+        hi = jnp.where(_need(hi), hi * 2.0, hi)
+        return hi, i + 1
+
+    hi, _ = lax.while_loop(dbl_cond, dbl_body, (hi, jnp.asarray(0, jnp.int32)))
+
+    lo = jnp.zeros_like(hi)
+    done = ~active
+
+    def bis_body(_, carry):
+        lo, hi, done = carry
+        mid = 0.5 * (lo + hi)
+        c, _ = count(mid)
+        ge = c >= leftover
+        hi2 = jnp.where(~done & ge, mid, hi)
+        lo2 = jnp.where(~done & ~ge, mid, lo)
+        done2 = done | (hi2 - lo2 <= rel_tol * hi2)
+        return lo2, hi2, done2
+
+    lo, hi, done = lax.fori_loop(0, max_steps, bis_body, (lo, hi, done))
+    c_lo, g_lo = count(lo)
+    d = jnp.where(active[..., None], g_lo, d0)
+    leftover2 = jnp.where(active, leftover - c_lo, leftover)
+    return d, leftover2
 
 
 def _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover):
@@ -264,8 +352,10 @@ def _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover):
     return d, ok
 
 
-@partial(jax.jit, static_argnames=("max_steps",))
-def _partition_units_jit(xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps):
+@partial(jax.jit, static_argnames=("max_steps", "completion_fast"))
+def _partition_units_jit(
+    xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps, completion_fast=False
+):
     dt = xs.dtype
     it = caps_i.dtype
     n_f = jnp.asarray(n, dt)
@@ -298,10 +388,17 @@ def _partition_units_jit(xs, ss, counts, caps_i, n, min_units, rel_tol, max_step
     kk0 = jnp.zeros(leftover.shape, it)
     d, leftover, _ = lax.while_loop(tb_cond, tb_body, (d, leftover, kk0))
 
+    # -- threshold-count bulk grant (static branch: monotone banks only) —
+    #    collapses all but the boundary-tied units into one more bisection.
+    rem = alloc - jnp.floor(alloc)
+    if completion_fast:
+        d, leftover = _threshold_prefill(
+            xs, ss, counts, caps_i, d, leftover, t_star, rel_tol, max_steps
+        )
+
     # -- greedy completion (see _complete_greedy_one); stacked banks flatten
     #    their leading dims and vmap, so every column completes in the same
     #    device program (lanes mask out as their leftovers hit zero).
-    rem = alloc - jnp.floor(alloc)
     batch = xs.shape[:-2]
     if batch:
         b = int(np.prod(batch))
@@ -386,36 +483,49 @@ class JaxModelBank:
     counts: jnp.ndarray
     max_count: Optional[int] = None
     empty_rows: Optional[np.ndarray] = None
+    # Host-side monotone-time flag (None = unknown; resolved by is_monotone()
+    # — from the numpy bank's host check at construction, or by one tiny
+    # jitted reduction + scalar sync after a device-side fold_in).  Routes
+    # the threshold-count completion.
+    monotone: Optional[bool] = None
 
     is_jax = True  # duck-type marker for the partition.py dispatcher
 
     # -- construction --------------------------------------------------------
 
     @classmethod
-    def from_bank(cls, bank: ModelBank) -> "JaxModelBank":
+    def from_bank(cls, bank: ModelBank, dtype=None) -> "JaxModelBank":
+        """Device copy of a numpy bank.  ``dtype`` overrides the float dtype
+        of the model arrays (the ``SpeedStore`` dtype policy — e.g.
+        ``np.float32`` for a cheaper serving-fleet bank); the default keeps
+        the platform-native dtype (float64 under x64)."""
         return cls(
-            xs=jnp.asarray(bank.xs),
-            ss=jnp.asarray(bank.ss),
+            xs=jnp.asarray(bank.xs, dtype=dtype),
+            ss=jnp.asarray(bank.ss, dtype=dtype),
             counts=jnp.asarray(bank.counts),
             max_count=int(bank.counts.max(initial=0)),
             empty_rows=np.asarray(bank.counts) == 0,
+            # resolve on the host while the arrays are still numpy — one
+            # O(p k) pass, so stacked/2-D paths never pay a device check
+            monotone=bank.is_monotone(),
         )
 
     @classmethod
-    def from_models(cls, models: Sequence[object]) -> "JaxModelBank":
+    def from_models(cls, models: Sequence[object], dtype=None) -> "JaxModelBank":
         """Adapt scalar models (``TypeError`` for non-piecewise ones —
         callers fall back to the host paths)."""
-        return cls.from_bank(ModelBank.from_models(models))
+        return cls.from_bank(ModelBank.from_models(models), dtype=dtype)
 
     @classmethod
-    def empty(cls, p: int, k: int = 8) -> "JaxModelBank":
+    def empty(cls, p: int, k: int = 8, dtype=None) -> "JaxModelBank":
         """A bank of ``p`` empty rows (the cold-start DFPA carry)."""
         return cls(
-            xs=jnp.zeros((p, k)),
-            ss=jnp.zeros((p, k)),
+            xs=jnp.zeros((p, k), dtype=dtype),
+            ss=jnp.zeros((p, k), dtype=dtype),
             counts=jnp.zeros((p,), dtype=jax.dtypes.canonicalize_dtype(np.int64)),
             max_count=0,
             empty_rows=np.ones((p,), dtype=bool),
+            monotone=True,  # vacuous: no observed points yet
         )
 
     @classmethod
@@ -424,12 +534,20 @@ class JaxModelBank:
         column's ``t*`` bisects simultaneously (the 2-D partitioner)."""
         k = max(int(b.xs.shape[-1]) for b in banks)
         padded = [b._padded_to(k) for b in banks]
+        flags = [b.monotone for b in banks]
         return cls(
             xs=jnp.stack([px for px, _ in padded]),
             ss=jnp.stack([ps for _, ps in padded]),
             counts=jnp.stack([b.counts for b in banks]),
             max_count=max(b._max_count_bound() for b in banks),
             empty_rows=np.stack([b._empty_rows_host() for b in banks]),
+            # All columns known-monotone -> stacked fast path; any known
+            # violation demotes; unknowns resolve lazily on first partition.
+            monotone=(
+                True if all(f is True for f in flags)
+                else False if any(f is False for f in flags)
+                else None
+            ),
         )
 
     def _padded_to(self, k: int):
@@ -453,6 +571,7 @@ class JaxModelBank:
             xs=np.asarray(self.xs, dtype=np.float64),
             ss=np.asarray(self.ss, dtype=np.float64),
             counts=np.asarray(self.counts, dtype=np.int64),
+            monotone=self.monotone,
         )
 
     # -- shape ---------------------------------------------------------------
@@ -492,12 +611,15 @@ class JaxModelBank:
         buffers are copied, so folding either bank cannot invalidate the
         other; on CPU they alias harmlessly.
         """
+        scale_host = np.asarray(speed_scale, dtype=np.float64)
         scale = jnp.broadcast_to(jnp.asarray(speed_scale, self.dtype), self.counts.shape)
         xs = jnp.array(self.xs) if DONATES_CARRY else self.xs
         counts = jnp.array(self.counts) if DONATES_CARRY else self.counts
         return JaxModelBank(
             xs=xs, ss=self.ss * scale[..., None], counts=counts,
             max_count=self.max_count, empty_rows=self.empty_rows,
+            # positive per-row scaling preserves time-monotonicity
+            monotone=self.monotone if bool(np.all(scale_host > 0.0)) else None,
         )
 
     def copy(self) -> "JaxModelBank":
@@ -507,7 +629,7 @@ class JaxModelBank:
         return JaxModelBank(
             xs=jnp.array(self.xs), ss=jnp.array(self.ss),
             counts=jnp.array(self.counts), max_count=self.max_count,
-            empty_rows=self.empty_rows,
+            empty_rows=self.empty_rows, monotone=self.monotone,
         )
 
     def _max_count_bound(self) -> int:
@@ -523,6 +645,19 @@ class JaxModelBank:
         if self.empty_rows is None:
             self.empty_rows = np.asarray(self.counts) == 0
         return self.empty_rows
+
+    def is_monotone(self) -> bool:
+        """Host bool of the bank's monotone-time flag (the threshold-count
+        completion's routing contract — see ``ModelBank.is_monotone``).
+
+        Construction paths inherit the numpy bank's host check for free;
+        after a device-side ``fold_in`` the flag is unknown and resolving it
+        costs one ``O(p k)`` jitted reduction plus a scalar device->host
+        sync — paid at most once per fold/partition cycle, i.e. amortized
+        into the repartition the observation was folded in for."""
+        if self.monotone is None:
+            self.monotone = bool(_monotone_check_jit(self.xs, self.ss, self.counts))
+        return self.monotone
 
     # -- the jitted partitioners --------------------------------------------
 
@@ -555,7 +690,7 @@ class JaxModelBank:
 
     def partition_units(
         self, n, caps=None, *, min_units: int = 0, max_steps: int = 200,
-        with_t: bool = False,
+        with_t: bool = False, completion: str = "auto",
     ) -> np.ndarray:
         """Integer partition on device; host-side feasibility checks raise
         the same ``ValueError`` s as the scalar and numpy-bank paths.
@@ -564,7 +699,20 @@ class JaxModelBank:
         column simultaneously).  Returns the host ``int`` allocation array;
         with ``with_t=True`` returns ``(allocations, t_star)`` — the inner
         continuous solve's equal-time point, at zero extra device work.
+
+        ``completion`` routes the integer completion (see the "completion
+        modes" section in ``modelbank.py``): ``"auto"`` uses the
+        threshold-count bulk grant iff the bank is monotone-time (one extra
+        jitted bisection instead of ~p/2 sequential argmin iterations —
+        the p=10^5 millisecond-repartition path), ``"greedy"`` forces the
+        exact per-unit loop, ``"threshold"`` forces the bulk grant
+        (benchmark-only on non-monotone banks).
         """
+        if completion not in ("auto", "threshold", "greedy"):
+            raise ValueError(f"unknown completion mode {completion!r}")
+        fast = completion == "threshold" or (
+            completion == "auto" and self.is_monotone()
+        )
         shape = self.counts.shape
         p = shape[-1]
         n_host = np.broadcast_to(np.asarray(n), shape[:-1])
@@ -603,6 +751,7 @@ class JaxModelBank:
             jnp.asarray(int(min_units), idtype),
             jnp.asarray(1e-12, self.dtype),
             max_steps,
+            completion_fast=fast,
         )
         if not bool(np.all(np.asarray(ok))):
             raise ValueError("caps infeasible during integer completion")
@@ -646,4 +795,8 @@ class JaxModelBank:
         return JaxModelBank(
             xs=nxs, ss=nss, counts=ncounts, max_count=min(bound + 1, k),
             empty_rows=self._empty_rows_host() & ~valid_host,
+            # The inserted points can create OR (duplicate-x replace) remove
+            # a monotonicity violation; the flag is re-resolved lazily by
+            # is_monotone() on the next partition (one device reduction).
+            monotone=None,
         )

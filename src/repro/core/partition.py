@@ -262,14 +262,88 @@ def _partition_units_scalar(
     return d, t_star
 
 
-def _partition_units_bank(
-    bank: ModelBank, n: int, icaps: List[int], *, min_units: int
-) -> Tuple[List[int], float]:
-    """Vectorized floor + lazy-heap greedy completion.
+def _threshold_prefill_bank(
+    bank: ModelBank,
+    d0: np.ndarray,
+    caps_arr: np.ndarray,
+    leftover: int,
+    t_star: float,
+    *,
+    rel_tol: float = 1e-12,
+    max_steps: int = 200,
+) -> Tuple[np.ndarray, int]:
+    """Threshold-count bulk completion for monotone-time banks.
 
-    Identical tie-breaking to the scalar loop: each leftover unit goes to the
-    processor with the smallest ``(time(d+1), -frac_remainder, index)``.
+    On a monotone bank the per-unit greedy processes unit increments in
+    globally sorted ``(time, -rem, index)`` order, so instead of popping
+    units one at a time we bisect a time threshold ``t``:
+
+        count(t) = sum_i clip(floor(alloc_at_time(t, cap_i)), d0_i, cap_i)
+                   - sum_i d0_i
+
+    is the number of leftover units the greedy would have granted by the
+    time it reaches ``t``.  Bisection maintains the strict bracket
+    ``count(lo) < leftover <= count(hi)``; everything counted at ``lo`` is
+    granted in one array op, and only the boundary-tied remainder (at least
+    1, typically a handful) is returned for the exact greedy to place — so
+    tie-breaking, infeasibility behaviour and in practice the allocations
+    themselves stay bit-identical to the per-unit path, at the cost of one
+    more bisection instead of ~p/2 sequential pops.
+
+    Mirrored expression-for-expression by ``_threshold_prefill`` in
+    ``modelbank_jax.py`` (same doubling bracket, same after-update early
+    exit), so the two banked backends take identical branch sequences under
+    x64.
     """
+    caps_f = caps_arr.astype(np.float64)
+    base_total = int(d0.sum())
+
+    def count(t: float) -> Tuple[int, np.ndarray]:
+        g = np.clip(
+            np.floor(bank.alloc_at_time(t, caps_f)).astype(np.int64), d0, caps_arr
+        )
+        return int(g.sum()) - base_total, g
+
+    # Bracket: alloc(t -> inf) -> caps and sum(caps) >= n, so doubling from
+    # the continuous solve's t* always terminates.
+    hi = max(float(t_star), 1e-9)
+    for _ in range(200):
+        c_hi, _ = count(hi)
+        if c_hi >= leftover:
+            break
+        hi *= 2.0
+    else:  # pragma: no cover - guarded by the feasibility checks above
+        raise RuntimeError("could not bracket the completion threshold")
+    lo = 0.0
+    for _ in range(max_steps):
+        mid = 0.5 * (lo + hi)
+        c_mid, _ = count(mid)
+        if c_mid >= leftover:
+            hi = mid
+        else:
+            lo = mid
+        if hi - lo <= rel_tol * hi:
+            break
+    c_lo, g_lo = count(lo)
+    return g_lo, leftover - c_lo
+
+
+def _partition_units_bank(
+    bank: ModelBank, n: int, icaps: List[int], *, min_units: int,
+    completion: str = "auto",
+) -> Tuple[List[int], float]:
+    """Vectorized floor + integer completion.
+
+    ``completion`` selects how the leftover units are placed (see the
+    "completion modes" section in ``modelbank.py``): ``"greedy"`` is the
+    per-unit lazy heap, ``"threshold"`` forces the threshold-count bulk
+    grant, ``"auto"`` (default) uses threshold-count iff the bank is
+    monotone-time.  All modes share the heap for the final boundary units,
+    so tie-breaking is identical: each unit goes to the processor with the
+    smallest ``(time(d+1), -frac_remainder, index)``.
+    """
+    if completion not in ("auto", "threshold", "greedy"):
+        raise ValueError(f"unknown completion mode {completion!r}")
     p = bank.p
     caps_arr = np.asarray(icaps, dtype=np.int64)
     xs_list, t_star = _continuous_bank(bank, float(n), [float(c) for c in icaps])
@@ -292,8 +366,13 @@ def _partition_units_bank(
                 leftover += 1
             k += 1
 
+    rem = xs - np.floor(xs)
+    if leftover > 0 and (
+        completion == "threshold"
+        or (completion == "auto" and bank.is_monotone())
+    ):
+        d, leftover = _threshold_prefill_bank(bank, d, caps_arr, leftover, t_star)
     if leftover > 0:
-        rem = xs - np.floor(xs)
         # Initial candidate times at d+1 for the whole bank in one pass; each
         # processor keeps exactly one heap entry, refreshed when it wins a unit.
         t_next = bank.time((d + 1).astype(np.float64))

@@ -157,9 +157,20 @@ class Scheduler:
         backend: str = "numpy",
         detector: Optional[Any] = None,
         analytic_tol: Optional[float] = None,
+        completion: str = "auto",
     ):
         if backend not in ("scalar", "numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
+        if completion not in ("auto", "threshold", "greedy"):
+            raise ValueError(f"unknown completion mode {completion!r}")
+        # Integer-completion routing for every partition this session makes:
+        # "auto" = threshold-count on monotone banks (the p=10^5 fast path),
+        # exact per-unit greedy otherwise; see modelbank.py "completion modes".
+        # On the session knob "threshold" means "wherever one exists":
+        # scalar-backed stores (non-piecewise models, forced baselines) are
+        # demoted to their exact loop by _completion_for — the strict
+        # refusal lives on the direct SpeedStore API.
+        self.completion = completion
         self.policy = policy
         self.grid = grid
         self.eps = float(eps)
@@ -222,6 +233,22 @@ class Scheduler:
         return self.store.models
 
     @property
+    def dtype(self):
+        """The session's device-bank dtype policy — the store's, when one
+        exists (propagated to every child/grid/elastic store this session
+        creates, so a float32 session stays float32 end to end)."""
+        return self.store.dtype if self.store is not None else None
+
+    def _completion_for(self, store: SpeedStore) -> str:
+        """The session's completion knob for one store: ``"threshold"`` is
+        demoted to ``"auto"`` on scalar-backed stores (they only have the
+        exact per-unit loop), so the knob behaves identically on every
+        Scheduler path — flat, grid, elastic."""
+        if self.completion == "threshold" and store.backend == "scalar":
+            return "auto"
+        return self.completion
+
+    @property
     def imbalance_estimate(self) -> float:
         ts = [
             m.time(di)
@@ -258,7 +285,9 @@ class Scheduler:
         if caps is not None:
             self.caps = list(caps)
         mu = self.min_units if min_units is None else int(min_units)
-        d, t_star = self.store.partition(n, self.caps, min_units=mu)
+        d, t_star = self.store.partition(
+            n, self.caps, min_units=mu, completion=self._completion_for(self.store)
+        )
         self.d = list(d)
         return self._flat_result(d, t_star, eps=self.eps if eps is None else eps)
 
@@ -321,7 +350,8 @@ class Scheduler:
         if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
             return False
         new_d = self.store.partition_units(
-            self.n_units, self.caps, min_units=self.min_units
+            self.n_units, self.caps, min_units=self.min_units,
+            completion=self._completion_for(self.store),
         )
         if new_d == self.d:
             return False
@@ -395,7 +425,9 @@ class Scheduler:
             return list(times)
 
         def repartition() -> List[int]:
-            return store.partition_units(n, caps, min_units=mu)
+            return store.partition_units(
+                n, caps, min_units=mu, completion=self._completion_for(store)
+            )
 
         # Step 1: initial distribution — even split (paper), or the
         # warm-start partition when prior estimates exist (elastic restart).
@@ -541,7 +573,7 @@ class Scheduler:
                 else:
                     caps = [self.caps[i] for i in surviving] + [join_cap] * joined
         new = Scheduler(
-            SpeedStore.from_models(models, backend=self.backend),
+            SpeedStore.from_models(models, backend=self.backend, dtype=self.dtype),
             policy=self.policy,
             n_units=self.n_units,
             eps=self.eps,
@@ -550,10 +582,12 @@ class Scheduler:
             smooth=self.smooth,
             backend=self.backend,
             detector=self.detector,
+            completion=self.completion,
         )
         if all(m.num_points for m in models) and new.n_units is not None:
             new.d = new.store.partition_units(
-                new.n_units, new.caps, min_units=new.min_units
+                new.n_units, new.caps, min_units=new.min_units,
+                completion=new._completion_for(new.store),
             )
         return new
 
@@ -688,12 +722,13 @@ class Scheduler:
                 child = Scheduler(
                     SpeedStore.from_models(
                         [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm],
-                        backend=self._backend,
+                        backend=self._backend, dtype=self.dtype,
                     )
                     if warm is not None
-                    else SpeedStore.empty(p, backend=self._backend),
+                    else SpeedStore.empty(p, backend=self._backend, dtype=self.dtype),
                     policy=Policy.DFPA,
                     backend=self._backend,
+                    completion=self.completion,
                 )
                 res = child.autotune(
                     ex, M, eps,
@@ -805,8 +840,11 @@ class Scheduler:
                     models,
                     analytic_tol=self.analytic_tol,
                     analytic_hi=float(M) if self.analytic_tol is not None else None,
+                    dtype=self.dtype,
                 )
-                rows[j] = col_store.partition_units(M, min_units=1)
+                rows[j] = col_store.partition_units(
+                    M, min_units=1, completion=self._completion_for(col_store)
+                )
                 times[j] = _col_times(grid, j, widths, rows[j])
             imb = _flat_imbalance(times)
             if best is None or imb < best.imbalance:
@@ -854,13 +892,22 @@ class Scheduler:
         if self._backend == "jax":
             from .modelbank_jax import JaxModelBank
 
-            stacked = JaxModelBank.stack([JaxModelBank.from_bank(b) for b in col_banks])
-            d = stacked.partition_units(M, min_units=min_units)
+            stacked = JaxModelBank.stack(
+                [JaxModelBank.from_bank(b, dtype=self.dtype) for b in col_banks]
+            )
+            d = stacked.partition_units(
+                M, min_units=min_units, completion=self.completion
+            )
             return [[int(v) for v in row] for row in d]
-        return [
-            SpeedStore.from_bank(b).partition_units(M, min_units=min_units)
-            for b in col_banks
-        ]
+        rows = []
+        for b in col_banks:
+            store = SpeedStore.from_bank(b)
+            rows.append(
+                store.partition_units(
+                    M, min_units=min_units, completion=self._completion_for(store)
+                )
+            )
+        return rows
 
     # -- persistence (self-adaptability across restarts) ----------------------
 
@@ -870,6 +917,7 @@ class Scheduler:
         ``observe`` produces bit-identical allocations (the legacy
         ``BalanceController.state_dict`` dropped ``backend``/``smooth`` and
         friends)."""
+        store_state = self.store.state_dict()
         return {
             "version": 1,
             "policy": self.policy.value,
@@ -879,9 +927,11 @@ class Scheduler:
             "eps": self.eps,
             "min_units": self.min_units,
             "smooth": self.smooth,
+            "completion": self.completion,
             "caps": list(self.caps) if self.caps is not None else None,
             "d": list(self.d),
-            "points": self.store.state_dict()["points"],
+            "points": store_state["points"],
+            "dtype": store_state["dtype"],
             "ema": [[int(g), int(du), float(v)] for (g, du), v in self._ema.items()],
             "rebalances": self.rebalances,
             "steps_observed": self.steps_observed,
@@ -900,12 +950,17 @@ class Scheduler:
             caps=state.get("caps"),
             smooth=state.get("smooth", 0.5),
             backend=state.get("backend", "numpy"),
+            completion=state.get("completion", "auto"),
         )
         cfg.update(overrides)
         backend = cfg.pop("backend")
+        dtype = state.get("dtype")
         models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
         sched = cls(
-            SpeedStore.from_models(models, backend=backend),
+            SpeedStore.from_models(
+                models, backend=backend,
+                dtype=np.dtype(dtype) if dtype is not None else None,
+            ),
             backend=backend,
             **cfg,
         )

@@ -27,6 +27,23 @@ Three backends, resolved once:
     instead of being rebuilt from the scalars; partitions run under
     ``jax.jit``.
 
+Dtype policy (serving fleets)
+-----------------------------
+
+``from_models(..., dtype=np.float32)`` (also on ``empty``/``from_state``)
+builds the jax device carry in the requested float dtype instead of the
+platform-native one (float64 under x64).  The decision data lives in
+``BENCH_partition.json``: the ``jax_f32_*`` columns measure float32
+allocation drift against the float64 reference at both serving scales —
+ZERO unit drift at p=10^4 (n=10^6; also locked by
+``test_float32_store_allocations_match_float64_at_p_10k``) and a worst case
+of ±1 unit (2 total of n=10^7) at p=10^5 — so serving fleets can run the
+cheaper dtype at sub-unit cost.  The default stays ``None`` (native dtype)
+because the cross-backend parity gates are a bit-identity contract that
+only float64 satisfies.  The host (scalar/numpy) paths always compute in
+float64 — ``dtype`` is a device-bank policy, recorded in ``state_dict``
+and round-tripped (by ``Scheduler.state_dict`` too).
+
 Analytic sample-and-bank
 ------------------------
 
@@ -133,11 +150,13 @@ class SpeedStore:
         *,
         bank: Optional[ModelBank] = None,
         jbank=None,
+        dtype=None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
         self._models = list(models) if models is not None else None
         self.backend = backend
+        self.dtype = dtype  # device-bank float dtype policy (None = native)
         self._np_bank = bank  # wrapped ModelBank (models is None) only
         self._jbank = jbank  # device carry (jax backend); None -> lazy rebuild
 
@@ -153,6 +172,7 @@ class SpeedStore:
         analytic_hi: Optional[float] = None,
         analytic_lo: float = 1.0,
         analytic_max_points: int = 64,
+        dtype=None,
     ) -> "SpeedStore":
         """Build a store from scalar models, resolving the backend once.
 
@@ -160,7 +180,9 @@ class SpeedStore:
         representation and ``"scalar"`` otherwise.  With ``analytic_tol`` set
         (and ``analytic_hi`` bounding the sampled range, typically the
         problem size ``n``), non-piecewise models are sample-and-banked so
-        they can ride the vectorized backends.
+        they can ride the vectorized backends.  ``dtype`` is the device-bank
+        float dtype policy (see the module docstring); it only affects the
+        jax backend's carry.
         """
         models = list(models)
         if analytic_tol is not None:
@@ -184,32 +206,34 @@ class SpeedStore:
             try:
                 ModelBank.from_models(models)
             except TypeError:
-                return cls(models, "scalar")
-            return cls(models, "numpy")
+                return cls(models, "scalar", dtype=dtype)
+            return cls(models, "numpy", dtype=dtype)
         if backend == "scalar":
-            return cls(models, "scalar")
+            return cls(models, "scalar", dtype=dtype)
         if backend in ("numpy", "jax"):
             try:
                 ModelBank.from_models(models)
             except TypeError:
                 # Mirrors the legacy per-call fallback: non-piecewise models
                 # keep the scalar path even when a banked backend was asked.
-                return cls(models, "scalar")
+                return cls(models, "scalar", dtype=dtype)
             if backend == "jax":
-                return cls(models, "jax", jbank=cls._initial_carry(models))
-            return cls(models, "numpy")
+                return cls(
+                    models, "jax", jbank=cls._initial_carry(models, dtype), dtype=dtype
+                )
+            return cls(models, "numpy", dtype=dtype)
         raise ValueError(f"unknown backend {backend!r}")
 
     @staticmethod
-    def _initial_carry(models: Sequence[SpeedModel]):
+    def _initial_carry(models: Sequence[SpeedModel], dtype=None):
         """The DFPA device carry: built from the models when any has points,
         otherwise the empty bank (identical to the legacy dfpa/controller
         initialization)."""
         from .modelbank_jax import JaxModelBank
 
         if any(getattr(m, "num_points", 0) > 0 for m in models):
-            return JaxModelBank.from_models(models)
-        return JaxModelBank.empty(len(models))
+            return JaxModelBank.from_models(models, dtype=dtype)
+        return JaxModelBank.empty(len(models), dtype=dtype)
 
     @classmethod
     def from_speeds(cls, speeds: Sequence[float], *, backend: str = "numpy") -> "SpeedStore":
@@ -217,13 +241,15 @@ class SpeedStore:
         return cls.from_models([ConstantModel(float(s)) for s in speeds], backend=backend)
 
     @classmethod
-    def empty(cls, p: int, *, backend: str = "numpy") -> "SpeedStore":
+    def empty(cls, p: int, *, backend: str = "numpy", dtype=None) -> "SpeedStore":
         """``p`` empty piecewise estimates (the cold-start DFPA state)."""
         models = [PiecewiseLinearFPM() for _ in range(p)]
         if backend == "jax":
-            return cls(models, "jax", jbank=cls._initial_carry(models))
+            return cls(
+                models, "jax", jbank=cls._initial_carry(models, dtype), dtype=dtype
+            )
         if backend in ("numpy", "scalar"):
-            return cls(models, backend)
+            return cls(models, backend, dtype=dtype)
         raise ValueError(f"unknown backend {backend!r}")
 
     @classmethod
@@ -325,7 +351,7 @@ class SpeedStore:
         an invalidation (straggler reprofile), exactly like the legacy
         ``BalanceController._carry_bank``."""
         if self._jbank is None:
-            self._jbank = self._initial_carry(self._models)
+            self._jbank = self._initial_carry(self._models, self.dtype)
         return self._jbank
 
     def device_bank(self, *, snapshot: bool = True):
@@ -339,9 +365,9 @@ class SpeedStore:
         if self.backend == "jax":
             jb = self._carry()
         elif self._np_bank is not None and self._models is None:
-            jb = JaxModelBank.from_bank(self._np_bank)
+            jb = JaxModelBank.from_bank(self._np_bank, dtype=self.dtype)
         else:
-            jb = JaxModelBank.from_models(self.models)
+            jb = JaxModelBank.from_models(self.models, dtype=self.dtype)
         return jb.copy() if (snapshot and DONATES_CARRY) else jb
 
     def drop_carry(self) -> None:
@@ -448,22 +474,43 @@ class SpeedStore:
             return _continuous_bank(self.bank(), float(n), caps, rel_tol=rel_tol, max_steps=max_steps)
         return _continuous_scalar(self.models, float(n), caps, rel_tol=rel_tol, max_steps=max_steps)
 
-    def partition_units(self, n: int, caps=None, *, min_units: int = 0) -> List[int]:
+    def partition_units(
+        self, n: int, caps=None, *, min_units: int = 0, completion: str = "auto"
+    ) -> List[int]:
         """Integer partition of ``n`` units (allocations only)."""
-        return self.partition(n, caps, min_units=min_units)[0]
+        return self.partition(n, caps, min_units=min_units, completion=completion)[0]
 
-    def partition(self, n: int, caps=None, *, min_units: int = 0) -> Tuple[List[int], float]:
+    def partition(
+        self, n: int, caps=None, *, min_units: int = 0, completion: str = "auto"
+    ) -> Tuple[List[int], float]:
         """Integer partition plus the continuous solve's ``t*`` (free — the
-        unit partition bisects it anyway)."""
+        unit partition bisects it anyway).
+
+        ``completion`` routes the integer completion on the banked backends
+        (see the "completion modes" section in ``modelbank.py``): ``"auto"``
+        — threshold-count iff the bank's monotone-time flag holds, per-unit
+        greedy otherwise; ``"greedy"`` / ``"threshold"`` force a mode.  The
+        scalar backend always runs its exact per-unit loop and refuses
+        ``"threshold"``.
+        """
+        if completion not in ("auto", "threshold", "greedy"):
+            raise ValueError(f"unknown completion mode {completion!r}")
         p = self.p
         icaps = _prep_unit_caps(p, n, caps, min_units)
         if self.backend == "jax":
             d, t_star = self._carry().partition_units(
-                n, icaps, min_units=min_units, with_t=True
+                n, icaps, min_units=min_units, with_t=True, completion=completion
             )
             return [int(v) for v in d], float(t_star)
         if self.backend == "numpy":
-            return _partition_units_bank(self.bank(), n, icaps, min_units=min_units)
+            return _partition_units_bank(
+                self.bank(), n, icaps, min_units=min_units, completion=completion
+            )
+        if completion == "threshold":
+            raise ValueError(
+                "the scalar backend has no threshold completion; use a banked "
+                "backend or completion='auto'/'greedy'"
+            )
         return _partition_units_scalar(self.models, n, icaps, min_units=min_units)
 
     # -- derived metrics ------------------------------------------------------
@@ -495,9 +542,18 @@ class SpeedStore:
                     "build the store with analytic_tol to sample-and-bank it"
                 )
             points.append([(float(x), float(s)) for x, s in m.as_points()])
-        return {"backend": self.backend, "points": points}
+        return {
+            "backend": self.backend,
+            "points": points,
+            "dtype": np.dtype(self.dtype).name if self.dtype is not None else None,
+        }
 
     @classmethod
     def from_state(cls, state: Dict, *, backend: Optional[str] = None) -> "SpeedStore":
         models = [PiecewiseLinearFPM.from_points(p) for p in state["points"]]
-        return cls.from_models(models, backend=backend or state.get("backend", "numpy"))
+        dtype = state.get("dtype")
+        return cls.from_models(
+            models,
+            backend=backend or state.get("backend", "numpy"),
+            dtype=np.dtype(dtype) if dtype is not None else None,
+        )

@@ -57,6 +57,7 @@ from repro.core import (
     time_fn_2d_batch,
 )
 from repro.core.modelbank_jax import JaxModelBank
+from repro.core.partition import _partition_units_bank, _prep_unit_caps
 from repro.core.partition2d import bank_repartition_2d
 from repro.runtime.balance import BalanceController
 
@@ -187,12 +188,14 @@ def _check_query_parity(case, rng):
         assert a_np[i] == pytest.approx(m.alloc_at_time(t, float(caps[i])), rel=1e-10, abs=1e-10)
 
 
+@pytest.mark.slow
 def test_query_parity_fuzz_numpy_lane():
     rng = np.random.default_rng(101)
     for _ in range(200):
         _check_query_parity(_random_case(rng), rng)
 
 
+@pytest.mark.slow
 @given(case=_cases())
 @settings(max_examples=200, deadline=None)
 def test_query_parity_fuzz_hypothesis(case):
@@ -236,13 +239,39 @@ def _check_partition_parity(case):
     ms = [_makespan(models, d) for d in (d_scalar, d_bank, d_jax)]
     assert max(ms) - min(ms) <= 1e-9 * max(ms)
 
+    # fourth path: the threshold-count completion on monotone banks (auto
+    # routing demotes the rest — tests/test_completion.py proves that),
+    # checked against the FORCED per-unit greedy so the comparison stays
+    # fast-vs-exact even though "auto" (used by d_bank above) already picks
+    # the threshold path here.  Makespans must be bit-identical.
+    if bank.is_monotone():
+        icaps = list(_prep_unit_caps(p, n, caps, min_units))
+        d_thr, _ = _partition_units_bank(
+            bank, n, icaps, min_units=min_units, completion="threshold"
+        )
+        d_greedy, _ = _partition_units_bank(
+            bank, n, icaps, min_units=min_units, completion="greedy"
+        )
+        with enable_x64():
+            d_thr_jax = _jax_bank(bank).partition_units(
+                n, caps, min_units=min_units, completion="threshold"
+            )
+        assert sum(d_thr) == n
+        assert all(min_units <= di <= ci for di, ci in zip(d_thr, caps))
+        assert _makespan(models, d_thr) == _makespan(models, d_greedy)
+        if BIT_EXACT:
+            assert d_thr == d_greedy == d_bank
+            assert list(map(int, d_thr_jax)) == d_thr
 
+
+@pytest.mark.slow
 def test_partition_parity_fuzz_numpy_lane():
     rng = np.random.default_rng(202)
     for _ in range(200):
         _check_partition_parity(_random_case(rng, allow_empty=False))
 
 
+@pytest.mark.slow
 @given(case=_cases(allow_empty=False))
 @settings(max_examples=200, deadline=None)
 def test_partition_parity_fuzz_hypothesis(case):
@@ -282,16 +311,42 @@ def _check_infeasible_parity(case):
                                     min_units=kw["min_units"], **path_kw)
 
 
+@pytest.mark.slow
 def test_infeasible_parity_fuzz_numpy_lane():
     rng = np.random.default_rng(303)
     for _ in range(200):
         _check_infeasible_parity(_random_case(rng, allow_empty=False))
 
 
+@pytest.mark.slow
 @given(case=_cases(allow_empty=False))
 @settings(max_examples=200, deadline=None)
 def test_infeasible_parity_fuzz_hypothesis(case):
     _check_infeasible_parity(case)
+
+
+def test_query_parity_smoke():
+    rng = np.random.default_rng(111)
+    for _ in range(25):
+        _check_query_parity(_random_case(rng), rng)
+
+
+def test_partition_parity_smoke():
+    rng = np.random.default_rng(222)
+    for _ in range(25):
+        _check_partition_parity(_random_case(rng, allow_empty=False))
+
+
+def test_infeasible_parity_smoke():
+    rng = np.random.default_rng(333)
+    for _ in range(10):
+        _check_infeasible_parity(_random_case(rng, allow_empty=False))
+
+
+def test_fold_in_parity_smoke():
+    rng = np.random.default_rng(444)
+    for _ in range(25):
+        _check_fold_in_parity(rng)
 
 
 def test_min_units_cap_shortfall_raises_on_all_paths():
@@ -342,12 +397,14 @@ def _check_fold_in_parity(rng):
         assert got.row(i).as_points() == models[i].as_points()
 
 
+@pytest.mark.slow
 def test_fold_in_parity_fuzz_numpy_lane():
     rng = np.random.default_rng(404)
     for _ in range(200):
         _check_fold_in_parity(rng)
 
 
+@pytest.mark.slow
 @given(seed=st.integers(min_value=0, max_value=10**6))
 @settings(max_examples=200, deadline=None)
 def test_fold_in_parity_fuzz_hypothesis(seed):
