@@ -1,0 +1,366 @@
+"""Fleet-scale multi-tenant rounds: stacked driver vs q sequential loops.
+
+The ``FleetScheduler`` claim is economic: q concurrent jobs' rounds cost
+ONE stacked partition program (plus, while still measuring, one stacked
+fold-in program), where q independent ``Scheduler`` sessions pay q (resp.
+2q) device dispatches for the same work.  Two regimes are measured per
+(q, p), both post-compile medians:
+
+  * **measurement rounds** (``fleet_round_ms`` / ``seq_round_ms``) — the
+    DFPA loop while estimates are still being built: stacked repartition +
+    batched measurement + stacked fold-in for ALL q jobs, vs q independent
+    jax-backend ``SpeedStore`` sessions (a noisy executor keeps every job
+    measuring every round; the fold keeps growing the banks, so this
+    regime is partly compute-bound);
+  * **steady-state rebalance rounds** (``rebalance_*`` columns) — the
+    serving end state the paper targets ("partial estimates sufficient for
+    a given accuracy"): models frozen, tenant loads drift every round, and
+    the per-round work is re-partitioning everyone —
+    ``FleetScheduler.rebalance`` (one stacked program) vs q per-store
+    partitions.  This is the dispatch-bound regime where batching pays.
+
+Sweeps q ∈ {1..64} at p=100 and p ∈ {1000, 10000} at q=16 (full mode).
+
+Acceptance gates (exit 1):
+  * full mode — at every q >= 16: the stacked driver issues >= q x fewer
+    device dispatches per round (all p), and the steady-state rebalance
+    round is >= 3x faster wall-clock in the dispatch-bound regime (p=100
+    rows; at p >= 1000 a CPU host is bound by the same bisection flops on
+    both sides and the ratio converges to ~1x — reported, not gated);
+  * quick mode (the CI smoke) — stacked-vs-sequential ALLOCATION PARITY at
+    q=8 / p=100: a noise-free fleet must reproduce q independent
+    ``Scheduler.autotune`` loops bit-for-bit (allocations, histories,
+    folded estimates), plus the dispatch-ratio gate at q=8.
+
+Results are written to ``BENCH_fleet.json``.
+
+    PYTHONPATH=src python benchmarks/fleet_scale.py [--quick] [--out FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import jax
+
+# Bit-identical-to-sequential is the parity gate; that needs doubles.
+jax.config.update("jax_enable_x64", True)
+
+from repro.core import (  # noqa: E402
+    BatchedSimulatedExecutor2D,
+    PiecewiseLinearFPM,
+    Scheduler,
+    SimulatedExecutor,
+    SpeedStore,
+)
+from repro.fleet import FleetScheduler, JobSpec  # noqa: E402
+
+
+def make_tenants(q: int, p: int, seed: int = 0):
+    """q tenants on one p-processor fleet: per-(job, proc) plateau/knee
+    ground truth (the partition_scale fleet shape, one per tenant) plus
+    6-point warm banks sampled from it."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(1e-6, 3e-6, (q, p))
+    knee = rng.uniform(2e3, 2e4, (q, p))
+
+    def time_fn(X):  # X[q, p] -> T[q, p]
+        return X * base * (1.0 + np.where(X > knee, 3.0 * (X - knee) / knee, 0.0))
+
+    warm = []
+    for j in range(q):
+        models = []
+        for i in range(p):
+            xs = np.geomspace(16.0, 8.0 * knee[j, i], 6)
+            ts = xs * base[j, i] * (
+                1.0 + np.where(xs > knee[j, i], 3.0 * (xs - knee[j, i]) / knee[j, i], 0.0)
+            )
+            models.append(PiecewiseLinearFPM.from_points(list(zip(xs, xs / ts))))
+        warm.append(models)
+    return time_fn, warm, base, knee
+
+
+def steady_state_rounds(q, p, *, rounds, warmup, seed=0):
+    """Median per-round wall-clock + dispatch counts for both drivers."""
+    time_fn, warm, base, knee = make_tenants(q, p, seed=seed)
+    ns = [100 * p + 7 * j for j in range(q)]
+    names = [f"t{j}" for j in range(q)]
+
+    # --- the stacked fleet driver ------------------------------------------
+    fleet = FleetScheduler(p, backend="jax")
+    for j in range(q):
+        fleet.admit(
+            JobSpec(name=names[j], n=ns[j], eps=1e-12, min_units=1,
+                    max_iter=10**9, probe_budget=10**9),
+            models=warm[j],
+        )
+    ex = BatchedSimulatedExecutor2D(
+        time_fn_batch_2d=time_fn, p=p, q=q, job_names=names,
+        noise=0.02, rng=np.random.default_rng(seed + 1),
+    )
+
+    # --- q sequential jax sessions (the pre-fleet pattern) -----------------
+    stores = [
+        SpeedStore.from_models(
+            [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm[j]],
+            backend="jax",
+        )
+        for j in range(q)
+    ]
+    rng = np.random.default_rng(seed + 2)
+    seq_dispatch = 2 * q  # one partition + one fold per job per round
+
+    def seq_round():
+        for j in range(q):
+            d = stores[j].partition_units(ns[j], min_units=1)
+            x = np.asarray(d, dtype=np.float64)
+            t = x * base[j] * (
+                1.0 + np.where(x > knee[j], 3.0 * (x - knee[j]) / knee[j], 0.0)
+            )
+            t = np.where(x > 0, np.maximum(
+                t * (1.0 + 0.02 * rng.standard_normal(p)), 1e-12), 0.0)
+            s = np.where((x > 0) & (t > 0), x / np.where(t > 0, t, 1.0), 1.0)
+            stores[j].fold_in(x, s, (x > 0) & (t > 0))
+
+    # Interleaved per-round timing (the partition_scale best_of_pair
+    # convention): both drivers advance one round back-to-back, so
+    # shared-container load drift hits the pair together and the MEDIAN of
+    # per-round ratios stays honest even when absolute times wander.
+    fleet_times, seq_times, ratios = [], [], []
+    for r in range(warmup + rounds):
+        t0 = time.perf_counter()
+        fleet.step(ex)
+        tf = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        seq_round()
+        tsq = time.perf_counter() - t0
+        if r >= warmup:
+            fleet_times.append(tf)
+            seq_times.append(tsq)
+            ratios.append(tsq / tf)
+    assert len(fleet.active_jobs) == q, "benchmark jobs must not converge"
+    fleet_dispatch = fleet.device_dispatches / fleet.rounds
+
+    return {
+        "q": q,
+        "p": p,
+        "n_per_job": ns[0],
+        "rounds_timed": rounds,
+        "fleet_round_ms": float(np.median(fleet_times) * 1e3),
+        "seq_round_ms": float(np.median(seq_times) * 1e3),
+        "wallclock_speedup": float(np.median(ratios)),
+        "fleet_dispatches_per_round": fleet_dispatch,
+        "seq_dispatches_per_round": float(seq_dispatch),
+        "dispatch_ratio": seq_dispatch / fleet_dispatch,
+    }
+
+
+def rebalance_rounds(q, p, *, rounds, warmup, seed=0):
+    """The serving steady state: tenant models already learned (the paper's
+    'partial estimates sufficient for a given accuracy'), per-round work is
+    re-partitioning everyone under drifting loads — ``FleetScheduler.
+    rebalance`` (ONE stacked program) vs q per-store partitions.  This is
+    the dispatch-bound regime the wall-clock gate runs on."""
+    _, warm, _, _ = make_tenants(q, p, seed=seed)
+    ns = [100 * p + 7 * j for j in range(q)]
+    names = [f"t{j}" for j in range(q)]
+
+    fleet = FleetScheduler(p, backend="jax")
+    for j in range(q):
+        fleet.admit(
+            JobSpec(name=names[j], n=ns[j], eps=1e-12, min_units=1),
+            models=warm[j],
+        )
+
+    def loads(r):
+        return {
+            names[j]: ns[j] + ((r * 29 + j * 13) % max(7, p // 10))
+            for j in range(q)
+        }
+
+    stores = [
+        SpeedStore.from_models(
+            [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm[j]],
+            backend="jax",
+        )
+        for j in range(q)
+    ]
+
+    # Interleaved, same rationale as the measurement rounds above.
+    d0 = fleet.device_dispatches
+    fleet_times, seq_times, ratios = [], [], []
+    for r in range(warmup + rounds):
+        ld = loads(r)
+        t0 = time.perf_counter()
+        fleet.rebalance(ld)
+        tf = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for j in range(q):
+            stores[j].partition_units(ld[names[j]], min_units=1)
+        tsq = time.perf_counter() - t0
+        if r >= warmup:
+            fleet_times.append(tf)
+            seq_times.append(tsq)
+            ratios.append(tsq / tf)
+    fleet_dispatch = (fleet.device_dispatches - d0) / (warmup + rounds)
+
+    return {
+        "rebalance_fleet_ms": float(np.median(fleet_times) * 1e3),
+        "rebalance_seq_ms": float(np.median(seq_times) * 1e3),
+        "rebalance_speedup": float(np.median(ratios)),
+        "rebalance_fleet_dispatches_per_round": fleet_dispatch,
+        "rebalance_seq_dispatches_per_round": float(q),
+        "rebalance_dispatch_ratio": q / fleet_dispatch,
+    }
+
+
+def parity_gate(q=8, p=100, seed=11) -> bool:
+    """Noise-free fleet vs q independent Scheduler.autotune loops: the
+    bit-identity contract the CI smoke enforces (the full fuzz battery
+    lives in tests/test_fleet.py)."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(1e-5, 9e-5, (q, p))
+    knee = rng.uniform(50.0, 500.0, (q, p))
+
+    def batch_fn(X):
+        return X * base * (1.0 + np.where(X > knee, 3.0 * (X - knee) / knee, 0.0))
+
+    ns = [20 * p + 13 * j for j in range(q)]
+    ok = True
+    indep = []
+    for j in range(q):
+        fns = [
+            (lambda b, k: lambda x: float(
+                x * b * (1.0 + (3.0 * (x - k) / k if x > k else 0.0))
+            ))(base[j, i], knee[j, i])
+            for i in range(p)
+        ]
+        ex = SimulatedExecutor(time_fns=fns)
+        sched = Scheduler(SpeedStore.empty(p, backend="jax"), backend="jax")
+        indep.append(sched.autotune(ex, ns[j], 0.03, max_iter=8, min_units=1))
+    fleet = FleetScheduler(p, backend="jax")
+    names = [f"t{j}" for j in range(q)]
+    for j in range(q):
+        fleet.admit(JobSpec(name=names[j], n=ns[j], eps=0.03, min_units=1,
+                            max_iter=8))
+    ex2 = BatchedSimulatedExecutor2D(
+        time_fn_batch_2d=batch_fn, p=p, q=q, job_names=names
+    )
+    results = fleet.run(ex2)
+    for j in range(q):
+        r_f, r_i = results[names[j]], indep[j]
+        if (
+            r_f.allocations != r_i.allocations
+            or r_f.times != r_i.times
+            or r_f.diagnostics["history"] != r_i.diagnostics["history"]
+        ):
+            print(f"PARITY FAIL: job {names[j]} diverges from its "
+                  f"independent Scheduler.autotune loop")
+            ok = False
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI smoke: parity gate + small sweep")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        sweep = [(1, 100), (8, 100)]
+        rounds, warmup = args.rounds or 5, 3
+    else:
+        sweep = [(1, 100), (2, 100), (4, 100), (8, 100), (16, 100),
+                 (32, 100), (64, 100), (16, 1000), (16, 10000)]
+        rounds, warmup = args.rounds or 8, 3
+
+    rows = []
+    for q, p in sweep:
+        row = steady_state_rounds(q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p)
+        row.update(
+            rebalance_rounds(q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 1)
+        )
+        rows.append(row)
+        print(
+            f"q={q:3d} p={p:6d}"
+            f"  measure {row['fleet_round_ms']:8.2f} vs {row['seq_round_ms']:8.2f} ms"
+            f" ({row['wallclock_speedup']:5.2f}x)"
+            f"  rebalance {row['rebalance_fleet_ms']:8.2f} vs "
+            f"{row['rebalance_seq_ms']:8.2f} ms ({row['rebalance_speedup']:5.2f}x)"
+            f"  dispatches {row['fleet_dispatches_per_round']:.1f} vs "
+            f"{row['seq_dispatches_per_round']:.0f}"
+            f" ({row['dispatch_ratio']:5.1f}x fewer)",
+            flush=True,
+        )
+
+    print("parity gate (q=8, p=100, noise-free) ...", flush=True)
+    parity_ok = parity_gate()
+    print("parity:", "OK" if parity_ok else "FAIL")
+
+    payload = {
+        "benchmark": "fleet_scale",
+        "description": (
+            "multi-tenant rounds, FleetScheduler vs q independent "
+            "jax-backend sessions: measurement rounds (stacked [q,p,k] "
+            "partition + fold-in = 2 programs/round vs 2q; 2% noise keeps "
+            "every job measuring, so banks keep growing and large p turns "
+            "compute-bound — and at p=10^4 the q-wide [q,p,k] working set "
+            "falls out of CPU cache, so the stacked measurement round can "
+            "even lose to sequential there) and steady-state rebalance "
+            "rounds (models frozen, loads drift: FleetScheduler.rebalance "
+            "= 1 program vs q — the dispatch-bound serving regime the >=3x "
+            "wall-clock gate runs on at p=100); medians post-compile, "
+            "fleet/sequential rounds interleaved so shared-runner load "
+            "drift hits both together (speedup = median per-round ratio); "
+            "parity = "
+            "noise-free fleet reproduces q independent Scheduler.autotune "
+            "loops bit-for-bit"
+        ),
+        "rounds_timed": rounds,
+        "parity_q8_p100": parity_ok,
+        "sweep": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"-> {args.out}")
+
+    rc = 0
+    if not parity_ok:
+        rc = 1
+    for row in rows:
+        if row["q"] >= 16:
+            if (
+                row["dispatch_ratio"] < row["q"]
+                or row["rebalance_dispatch_ratio"] < row["q"]
+            ):
+                print(f"FAIL: dispatch ratio {row['dispatch_ratio']:.1f}x < "
+                      f"q={row['q']} at p={row['p']}")
+                rc = 1
+            # Wall-clock gate runs on the dispatch-bound serving regime
+            # (steady-state rebalance rounds at p=100).  At p >= 1000 on a
+            # CPU host both sides are bound by the SAME bisection flops and
+            # converge to ~1x — reported, not gated; a real accelerator's
+            # dispatch overhead is where the stacked win grows (ROADMAP:
+            # real-TPU fleet lane).
+            if row["p"] <= 100 and row["rebalance_speedup"] < 3.0:
+                print(f"FAIL: steady-state rebalance speedup "
+                      f"{row['rebalance_speedup']:.2f}x < 3x at q={row['q']}, "
+                      f"p={row['p']}")
+                rc = 1
+    # quick mode: the dispatch economics must already show at q=8
+    if args.quick:
+        for row in rows:
+            if row["q"] >= 8 and row["dispatch_ratio"] < row["q"]:
+                print(f"FAIL: dispatch ratio {row['dispatch_ratio']:.1f}x < "
+                      f"q={row['q']} in quick sweep")
+                rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,9 +16,12 @@ groups (HCL-like piecewise-linear FPMs, ~6 observed points each):
     cost, and the steady-state repartition latency afterwards.
 
 Completion-mode columns: the synthetic fleets are monotone-time, so the
-default (``completion="auto"``) routes both banked backends through the
-threshold-count completion; each is also timed with the exact per-unit
-completion forced (``*_exact_s`` columns).  ``jax_completion_speedup`` is
+default (``completion="auto"``) routes the JAX backend through the
+threshold-count completion; on the numpy host path "auto" stays on the lazy
+heap (the PR 5 routing fix — ``bank_threshold_s`` records what the forced
+threshold pass costs there: ~one extra continuous solve).  Each backend is
+also timed with the exact per-unit completion forced (``*_exact_s``
+columns).  ``jax_completion_speedup`` is
 the headline ratio — at p=10^5 the sequential masked-argmin loop (~p/2
 ``while_loop`` iterations) is what used to block millisecond repartitioning,
 and the acceptance gate requires the threshold path to beat it by >= 10x
@@ -134,9 +137,11 @@ def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
         def makespan(d):
             return float(np.max(bank.time(np.asarray(d, dtype=np.float64))))
 
-        # The synthetic fleets are monotone-time, so "auto" = threshold-count
-        # on both banked backends; assert it so a generator change can't
-        # silently turn the completion columns into a no-op comparison.
+        # The synthetic fleets are monotone-time, so jax "auto" routes to
+        # threshold-count (host "auto" stays on the heap since the PR 5
+        # routing fix — the forced bank_threshold_s column is the host
+        # comparison); assert it so a generator change can't silently turn
+        # the completion columns into a no-op comparison.
         assert bank.is_monotone(), "benchmark fleet must be monotone-time"
         ex_reps = max(1, min(repeats, 2)) if p >= 10**5 else repeats
 
@@ -152,8 +157,11 @@ def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
         t_direct, t_facade, ratio = best_of_pair(direct_fn, facade_fn, pair_reps)
         d_bank = bank_store.partition_units(n, min_units=1)
 
-        # Exact per-unit completion forced on the numpy bank (the lazy heap)
-        # and the fast-vs-exact divergence data.
+        # Exact per-unit completion forced on the numpy bank (the lazy heap;
+        # since the PR 5 routing fix this is also what "auto" runs on the
+        # host path) plus the FORCED threshold column — the data behind
+        # keeping host-auto on the heap: the threshold pass costs ~one extra
+        # continuous solve here, a win only on the jitted backends.
         t_bank_exact = best_of(
             lambda: _partition_units_bank(
                 bank, n, list(icaps), min_units=1, completion="greedy"
@@ -163,19 +171,31 @@ def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
         d_bank_exact, _ = _partition_units_bank(
             bank, n, list(icaps), min_units=1, completion="greedy"
         )
+        t_bank_threshold = best_of(
+            lambda: _partition_units_bank(
+                bank, n, list(icaps), min_units=1, completion="threshold"
+            ),
+            ex_reps,
+        )
+        d_bank_threshold, _ = _partition_units_bank(
+            bank, n, list(icaps), min_units=1, completion="threshold"
+        )
 
         row = {
             "p": p,
             "n": n,
             "bank_s": t_direct,
             "bank_exact_s": t_bank_exact,
+            "bank_threshold_s": t_bank_threshold,
             "facade_s": t_facade,
             "facade_overhead_pct": 100.0 * (ratio - 1.0),
             "completion_max_unit_diff": int(
-                max(abs(a - b) for a, b in zip(d_bank, d_bank_exact))
+                max(abs(a - b) for a, b in zip(d_bank_threshold, d_bank_exact))
             ),
-            "completion_makespan_equal": makespan(d_bank) == makespan(d_bank_exact),
+            "completion_makespan_equal": makespan(d_bank_threshold)
+            == makespan(d_bank_exact),
         }
+        assert d_bank == d_bank_exact, "host auto must equal the greedy heap"
         if backend in ("numpy", "both") and p <= scalar_cutoff:
             scalar_store = SpeedStore.from_models(models, backend="scalar")
             t_scalar = best_of(
@@ -245,7 +265,8 @@ def run_sweep(ps, repeats: int, backend: str, units_per_proc: int = 100,
         rows.append(row)
         msg = (
             f"p={p:6d}  bank={t_direct * 1e3:9.3f} ms"
-            f" (exact {t_bank_exact * 1e3:9.3f} ms)"
+            f" (exact {t_bank_exact * 1e3:9.3f} ms,"
+            f" thr {t_bank_threshold * 1e3:9.3f} ms)"
             f"  facade=+{row['facade_overhead_pct']:5.2f}%"
         )
         if "scalar_s" in row:

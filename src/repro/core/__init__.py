@@ -54,8 +54,10 @@ from .scheduler import Partition, Policy, Scheduler
 from .speedstore import SpeedStore, sample_analytic_points
 from .executor import (
     BatchedSimulatedExecutor,
+    BatchedSimulatedExecutor2D,
     CallableExecutor,
     Executor,
+    FleetExecutor,
     RoundLog,
     SimulatedExecutor,
 )
@@ -103,7 +105,9 @@ def __getattr__(name):
 __all__ = [
     "AnalyticModel",
     "BatchedSimulatedExecutor",
+    "BatchedSimulatedExecutor2D",
     "CallableExecutor",
+    "FleetExecutor",
     "ConstantModel",
     "DFPAResult",
     "Executor",

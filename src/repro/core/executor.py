@@ -19,12 +19,14 @@ from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass, field
-from typing import Callable, List, Protocol, Sequence
+from typing import Callable, List, Optional, Protocol, Sequence
 
 __all__ = [
     "Executor",
+    "FleetExecutor",
     "SimulatedExecutor",
     "BatchedSimulatedExecutor",
+    "BatchedSimulatedExecutor2D",
     "CallableExecutor",
     "RoundLog",
 ]
@@ -49,6 +51,24 @@ class Executor(Protocol):
 
     def round_cost(self, times: Sequence[float]) -> float:
         """Wall-clock cost of one parallel round (incl. collectives)."""
+        ...
+
+
+class FleetExecutor(Protocol):
+    """Multi-job executor: one round runs several jobs' distributions over
+    the SAME fleet of ``num_procs`` processors at once (the
+    ``FleetScheduler``'s measurement primitive).  ``run_jobs`` receives the
+    NAME of every job measuring this round (names are the stable identity —
+    stack lanes shift when jobs retire) plus their distributions
+    ``D[len(names), p]`` and returns the matching times — the batched
+    analogue of ``Executor.run``."""
+
+    @property
+    def num_procs(self) -> int: ...
+
+    def run_jobs(self, names: Sequence[str], D) -> "object":
+        """Run ``D[k, i]`` units of job ``names[k]`` on processor ``i``;
+        return times of the same ``[len(names), p]`` shape."""
         ...
 
 
@@ -123,6 +143,80 @@ class BatchedSimulatedExecutor:
         times = [float(v) for v in t]
         self.logs.append(RoundLog(list(map(int, d)), times, self.round_cost(times)))
         return times
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times) + self.alpha + self.beta * self.num_procs
+
+    @property
+    def total_cost(self) -> float:
+        return sum(l.wall_cost for l in self.logs)
+
+
+@dataclass
+class BatchedSimulatedExecutor2D:
+    """Multi-job fleet simulator: ONE ``[q, p]``-valued time function for all
+    ``q`` jobs x ``p`` processors, so a whole fleet round — every admitted
+    job's measurement — costs one array op instead of ``q * p`` Python
+    calls.  This is the measurement half of the stacked-bank round driver
+    (``fleet/scheduler.py``); the 2-D grid partitioner drives its per-column
+    inner DFPA loops through it too (one executor for all ``q`` columns).
+
+    ``time_fn_batch_2d(X) -> T`` must accept the full ``[q, p]`` row space
+    (rows of jobs not measuring this round are zero; its values there are
+    discarded).  ``job_names`` maps job names to rows of that space (row =
+    index into the list); without it, names must be integer-like and index
+    the rows directly.  Mirrors ``SimulatedExecutor``'s collective-overhead
+    and noise model per job: one job's round costs ``max(times) + alpha +
+    beta * p``.
+    """
+
+    time_fn_batch_2d: Callable  # X[q, p] -> T[q, p], values at X <= 0 ignored
+    p: int
+    q: int
+    job_names: Optional[Sequence[str]] = None  # row k serves job_names[k]
+    alpha: float = 1e-4
+    beta: float = 1e-6
+    noise: float = 0.0
+    rng: object = None
+    logs: List[RoundLog] = field(default_factory=list)  # one per (job, round)
+
+    @property
+    def num_procs(self) -> int:
+        return self.p
+
+    def _row(self, name) -> int:
+        if self.job_names is not None:
+            rows = getattr(self, "_row_of", None)
+            if rows is None:
+                rows = {nm: i for i, nm in enumerate(self.job_names)}
+                self._row_of = rows  # job_names is fixed at construction
+            return rows[name]
+        return int(name)
+
+    def run_jobs(self, names: Sequence[str], D):
+        import numpy as np
+
+        rows = [self._row(nm) for nm in names]
+        X = np.zeros((self.q, self.p), dtype=np.float64)
+        X[rows] = np.asarray(D, dtype=np.float64)
+        T = np.asarray(self.time_fn_batch_2d(X), dtype=np.float64)
+        T = np.where(X > 0, T, 0.0)
+        if self.noise > 0.0 and self.rng is not None:
+            jitter = 1.0 + self.noise * self.rng.standard_normal((self.q, self.p))
+            T = np.where(X > 0, np.maximum(T * jitter, 1e-12), 0.0)
+        out = T[rows]
+        for k, r in enumerate(rows):
+            times = [float(v) for v in out[k]]
+            self.logs.append(
+                RoundLog([int(v) for v in X[r]], times, self.round_cost(times))
+            )
+        return out
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        """Single-job adapter (row 0), so the 2-D executor also satisfies
+        the plain ``Executor`` protocol for one-job fleets."""
+        name = self.job_names[0] if self.job_names is not None else 0
+        return [float(v) for v in self.run_jobs([name], [list(d)])[0]]
 
     def round_cost(self, times: Sequence[float]) -> float:
         return max(times) + self.alpha + self.beta * self.num_procs

@@ -66,6 +66,17 @@ positive caps), and all three produce allocations that sum exactly to ``n``
 with identical makespans (tie-breaks may place a leftover unit differently
 only between the scalar and banked continuous solvers' float paths).
 
+The fleet layer stacks the jax backend one level higher: q concurrent
+jobs' banks live in ONE ``[q, p, k]`` ``JaxModelBank`` owned by
+``repro.fleet.FleetScheduler`` (per-job ``n``/caps/``min_units`` and
+per-lane completion routing ride the batch dims), so a whole fleet's
+measurement round — or a ``Scheduler.partition_grid`` outer round, whose
+per-column inner loops run through the same driver — is one device
+program.  The stacked carry is derived state: the per-job scalar estimates
+stay the source of truth, and the stack is rebuilt lazily when jobs come
+and go.  ``repro.fleet.ProfileRegistry`` persists those estimates across
+sessions keyed by ``(device_class, workload_tag)``.
+
 Completion modes and the monotonicity contract
 ----------------------------------------------
 
@@ -90,16 +101,24 @@ after the continuous solve) has two implementations on the banked backends:
   repartition in milliseconds, and because the boundary remainder runs
   through the *same* greedy, makespans (and in practice allocations) are
   bit-identical to the per-unit path.
-* **auto** (the default) — threshold-count iff the bank's ``monotone`` flag
-  holds, per-unit greedy otherwise.  The flag is a host-side ``O(p k)``
-  check recorded lazily on the bank: time is nondecreasing on a linear
-  segment iff its knot times are ordered (``x0 * s1 <= x1 * s0``), so a row
-  is monotone iff its knots are sorted, its speeds positive and finite, and
-  every consecutive knot pair satisfies that inequality.  Adversarial
-  (non-monotone) banks — speed spikes, duplicate-``x`` rows whose replacing
-  speed jumps up — are provably demoted to the exact per-unit loop
-  (``tests/test_completion.py``); forcing ``completion="threshold"`` on
-  such a bank is a benchmark-only override with no exactness guarantee.
+* **auto** (the default) — backend-aware: on the *jitted* backends it picks
+  threshold-count iff the bank's ``monotone`` flag holds (per-unit greedy
+  otherwise), because the per-unit ``while_loop``'s serial dispatch was the
+  p=10^4..10^5 bottleneck there; on the *numpy host* path it always keeps
+  the lazy heap — the heap was never the host bottleneck, and the threshold
+  pass costs ~one extra continuous solve (``bank_threshold_s`` vs
+  ``bank_s`` in ``BENCH_partition.json`` records the tradeoff).  The flag
+  is a host-side ``O(p k)`` check recorded lazily on the bank: time is
+  nondecreasing on a linear segment iff its knot times are ordered
+  (``x0 * s1 <= x1 * s0``), so a row is monotone iff its knots are sorted,
+  its speeds positive and finite, and every consecutive knot pair satisfies
+  that inequality.  Adversarial (non-monotone) banks — speed spikes,
+  duplicate-``x`` rows whose replacing speed jumps up — are provably
+  demoted to the exact per-unit loop (``tests/test_completion.py``); on a
+  stacked ``[q, p, k]`` bank the routing is *per column*
+  (``JaxModelBank.monotone_lanes``), so an adversarial column demotes only
+  itself.  Forcing ``completion="threshold"`` on a non-monotone bank is a
+  benchmark-only override with no exactness guarantee.
 
 The scalar backend always runs its per-unit loop (asking it for
 ``"threshold"`` raises ``ValueError``).

@@ -162,21 +162,23 @@ def _total_alloc(xs, ss, counts, t, caps):
 
 
 @jax.jit
-def _monotone_check_jit(xs, ss, counts):
-    """Device mirror of ``modelbank._monotone_check`` (same expressions, one
-    scalar out): every row's time is nondecreasing iff knots are sorted,
-    speeds positive/finite, and knot times ordered (``x0 s1 <= x1 s0``)."""
+def _monotone_lanes_jit(xs, ss, counts):
+    """Device mirror of ``modelbank._monotone_check`` (same expressions),
+    reduced per *lane*: one bool per leading batch element (a scalar for a
+    plain ``[p, k]`` bank, ``[q]`` for a stacked one).  A lane is monotone
+    iff every row's time is nondecreasing — knots sorted, speeds positive
+    and finite, knot times ordered (``x0 s1 <= x1 s0``)."""
     k = xs.shape[-1]
     zero = jnp.asarray(0.0, xs.dtype)
     pts = jnp.arange(k) < counts[..., None]
     ok_pts = (xs > zero) & jnp.isfinite(xs) & (ss > zero) & jnp.isfinite(ss)
-    ok = ~jnp.any(pts & ~ok_pts)
+    ok = ~jnp.any(pts & ~ok_pts, axis=(-2, -1))
     if k >= 2:
         x0, x1 = xs[..., :-1], xs[..., 1:]
         s0, s1 = ss[..., :-1], ss[..., 1:]
         seg = jnp.arange(k - 1) < (counts - 1)[..., None]
         ok_seg = (x1 >= x0) & (x0 * s1 <= x1 * s0)
-        ok &= ~jnp.any(seg & ~ok_seg)
+        ok &= ~jnp.any(seg & ~ok_seg, axis=(-2, -1))
     return ok
 
 
@@ -214,21 +216,31 @@ def _partition_continuous_jit(xs, ss, counts, caps, n, rel_tol, max_steps):
 
     hi, _ = lax.while_loop(dbl_cond, dbl_body, (hi, jnp.asarray(0, jnp.int32)))
 
-    # Bisection: fixed iteration count, early exit replicated via `done`
-    # (set AFTER the update, exactly like the numpy loop's break).
+    # Bisection with early exit replicated via `done` (set AFTER the update,
+    # exactly like the numpy loop's break).  A while_loop, not a fori_loop:
+    # once every lane's `done` freezes its values, further iterations are
+    # provable no-ops, and rel_tol=1e-12 converges in ~45 steps — running
+    # all 200 made the p=10^4..10^5 (and stacked [q, p, k]) partitions
+    # ~4x more expensive for bit-identical results.
     lo = jnp.zeros_like(hi)
     done = jnp.zeros(hi.shape, dtype=bool)
 
-    def bis_body(_, carry):
-        lo, hi, done = carry
+    def bis_cond(carry):
+        _, _, done, i = carry
+        return (~jnp.all(done)) & (i < max_steps)
+
+    def bis_body(carry):
+        lo, hi, done, i = carry
         mid = 0.5 * (lo + hi)
         ge = _total_alloc(xs, ss, counts, mid, caps) >= n
         hi2 = jnp.where(~done & ge, mid, hi)
         lo2 = jnp.where(~done & ~ge, mid, lo)
         done2 = done | (hi2 - lo2 <= rel_tol * hi2)
-        return lo2, hi2, done2
+        return lo2, hi2, done2, i + 1
 
-    lo, hi, done = lax.fori_loop(0, max_steps, bis_body, (lo, hi, done))
+    lo, hi, done, _ = lax.while_loop(
+        bis_cond, bis_body, (lo, hi, done, jnp.asarray(0, jnp.int32))
+    )
     t_star = hi
 
     alloc = _alloc_at_time(xs, ss, counts, t_star, caps)
@@ -245,7 +257,9 @@ def _partition_continuous_jit(xs, ss, counts, caps, n, rel_tol, max_steps):
 # ---------------------------------------------------------------------------
 
 
-def _threshold_prefill(xs, ss, counts, caps_i, d0, leftover, t_star, rel_tol, max_steps):
+def _threshold_prefill(
+    xs, ss, counts, caps_i, d0, leftover, t_star, rel_tol, max_steps, fast_mask
+):
     """Batched threshold-count bulk completion (monotone-time banks).
 
     Expression-for-expression mirror of ``partition._threshold_prefill_bank``:
@@ -254,14 +268,16 @@ def _threshold_prefill(xs, ss, counts, caps_i, d0, leftover, t_star, rel_tol, ma
     count(hi)`` (masked doubling bracket from ``t*``, after-update early
     exit), bulk-grant everything counted at ``lo``, and hand the >=1
     boundary-tied remainder to the exact greedy.  Leading batch dims are the
-    stacked ``[q, p, k]`` bank's columns; lanes with no leftover pass
-    through untouched.
+    stacked ``[q, p, k]`` bank's columns; lanes with no leftover — or lanes
+    routed to the exact per-unit loop by ``fast_mask`` (per-column completion
+    routing: a non-monotone column demotes only itself, in the same device
+    program) — pass through untouched.
     """
     dt = xs.dtype
     it = d0.dtype
     caps_f = caps_i.astype(dt)
     base_total = d0.sum(axis=-1)
-    active = leftover > 0
+    active = (leftover > 0) & fast_mask
 
     def count(t):
         a = _alloc_at_time(xs, ss, counts, t, caps_f)
@@ -285,20 +301,28 @@ def _threshold_prefill(xs, ss, counts, caps_i, d0, leftover, t_star, rel_tol, ma
 
     hi, _ = lax.while_loop(dbl_cond, dbl_body, (hi, jnp.asarray(0, jnp.int32)))
 
+    # Same early-exit while_loop as the continuous bisection: inactive (or
+    # converged) lanes freeze, and the loop stops when all have.
     lo = jnp.zeros_like(hi)
     done = ~active
 
-    def bis_body(_, carry):
-        lo, hi, done = carry
+    def bis_cond(carry):
+        _, _, done, i = carry
+        return (~jnp.all(done)) & (i < max_steps)
+
+    def bis_body(carry):
+        lo, hi, done, i = carry
         mid = 0.5 * (lo + hi)
         c, _ = count(mid)
         ge = c >= leftover
         hi2 = jnp.where(~done & ge, mid, hi)
         lo2 = jnp.where(~done & ~ge, mid, lo)
         done2 = done | (hi2 - lo2 <= rel_tol * hi2)
-        return lo2, hi2, done2
+        return lo2, hi2, done2, i + 1
 
-    lo, hi, done = lax.fori_loop(0, max_steps, bis_body, (lo, hi, done))
+    lo, hi, done, _ = lax.while_loop(
+        bis_cond, bis_body, (lo, hi, done, jnp.asarray(0, jnp.int32))
+    )
     c_lo, g_lo = count(lo)
     d = jnp.where(active[..., None], g_lo, d0)
     leftover2 = jnp.where(active, leftover - c_lo, leftover)
@@ -354,15 +378,19 @@ def _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover):
 
 @partial(jax.jit, static_argnames=("max_steps", "completion_fast"))
 def _partition_units_jit(
-    xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps, completion_fast=False
+    xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps, fast_mask,
+    completion_fast=False,
 ):
+    # `n`, `min_units` and `fast_mask` carry the batch shape (scalars for a
+    # plain bank, [q] for a stacked one) — per-column unit counts, floors and
+    # completion routing all ride the same device program.
     dt = xs.dtype
     it = caps_i.dtype
     n_f = jnp.asarray(n, dt)
     caps_f = jnp.minimum(caps_i.astype(dt), n_f[..., None])  # continuous clip
     alloc, t_star = _partition_continuous_jit(xs, ss, counts, caps_f, n_f, rel_tol, max_steps)
 
-    d = jnp.maximum(jnp.asarray(min_units, it), jnp.floor(alloc).astype(it))
+    d = jnp.maximum(min_units[..., None], jnp.floor(alloc).astype(it))
     d = jnp.minimum(d, caps_i)
     leftover = jnp.asarray(n, it) - d.sum(axis=-1)
     p = xs.shape[-2]
@@ -388,12 +416,14 @@ def _partition_units_jit(
     kk0 = jnp.zeros(leftover.shape, it)
     d, leftover, _ = lax.while_loop(tb_cond, tb_body, (d, leftover, kk0))
 
-    # -- threshold-count bulk grant (static branch: monotone banks only) —
-    #    collapses all but the boundary-tied units into one more bisection.
+    # -- threshold-count bulk grant (static branch: skipped entirely when no
+    #    lane is monotone) — collapses all but the boundary-tied units into
+    #    one more bisection; fast_mask routes it per lane.
     rem = alloc - jnp.floor(alloc)
     if completion_fast:
         d, leftover = _threshold_prefill(
-            xs, ss, counts, caps_i, d, leftover, t_star, rel_tol, max_steps
+            xs, ss, counts, caps_i, d, leftover, t_star, rel_tol, max_steps,
+            fast_mask,
         )
 
     # -- greedy completion (see _complete_greedy_one); stacked banks flatten
@@ -488,6 +518,11 @@ class JaxModelBank:
     # jitted reduction + scalar sync after a device-side fold_in).  Routes
     # the threshold-count completion.
     monotone: Optional[bool] = None
+    # Per-lane mirror for stacked [q, p, k] banks (None = unknown; resolved
+    # by monotone_lanes()): routes the completion per column, so one
+    # adversarial column demotes only itself while the rest keep the
+    # threshold-count bulk grant — in the same device program.
+    monotone_cols: Optional[np.ndarray] = None
 
     is_jax = True  # duck-type marker for the partition.py dispatcher
 
@@ -542,10 +577,16 @@ class JaxModelBank:
             max_count=max(b._max_count_bound() for b in banks),
             empty_rows=np.stack([b._empty_rows_host() for b in banks]),
             # All columns known-monotone -> stacked fast path; any known
-            # violation demotes; unknowns resolve lazily on first partition.
+            # violation demotes its own column (per-lane routing); unknowns
+            # resolve lazily on first partition.
             monotone=(
                 True if all(f is True for f in flags)
                 else False if any(f is False for f in flags)
+                else None
+            ),
+            monotone_cols=(
+                np.asarray(flags, dtype=bool)
+                if all(f is not None for f in flags)
                 else None
             ),
         )
@@ -615,11 +656,13 @@ class JaxModelBank:
         scale = jnp.broadcast_to(jnp.asarray(speed_scale, self.dtype), self.counts.shape)
         xs = jnp.array(self.xs) if DONATES_CARRY else self.xs
         counts = jnp.array(self.counts) if DONATES_CARRY else self.counts
+        positive = bool(np.all(scale_host > 0.0))
         return JaxModelBank(
             xs=xs, ss=self.ss * scale[..., None], counts=counts,
             max_count=self.max_count, empty_rows=self.empty_rows,
             # positive per-row scaling preserves time-monotonicity
-            monotone=self.monotone if bool(np.all(scale_host > 0.0)) else None,
+            monotone=self.monotone if positive else None,
+            monotone_cols=self.monotone_cols if positive else None,
         )
 
     def copy(self) -> "JaxModelBank":
@@ -630,6 +673,7 @@ class JaxModelBank:
             xs=jnp.array(self.xs), ss=jnp.array(self.ss),
             counts=jnp.array(self.counts), max_count=self.max_count,
             empty_rows=self.empty_rows, monotone=self.monotone,
+            monotone_cols=self.monotone_cols,
         )
 
     def _max_count_bound(self) -> int:
@@ -656,8 +700,33 @@ class JaxModelBank:
         sync — paid at most once per fold/partition cycle, i.e. amortized
         into the repartition the observation was folded in for."""
         if self.monotone is None:
-            self.monotone = bool(_monotone_check_jit(self.xs, self.ss, self.counts))
+            if self.monotone_cols is not None:
+                self.monotone = bool(np.all(self.monotone_cols))
+            else:
+                self.monotone = bool(
+                    np.all(_monotone_lanes_jit(self.xs, self.ss, self.counts))
+                )
         return self.monotone
+
+    def monotone_lanes(self) -> np.ndarray:
+        """Per-lane host mirror of :meth:`is_monotone` — one bool per
+        leading batch element (shape ``[q]`` for a stacked bank, ``()`` for
+        a plain one).  ``completion="auto"`` on a stacked bank routes the
+        threshold-count completion through this, so a single non-monotone
+        column demotes only its own lane to the exact per-unit loop while
+        every other column keeps the bulk grant (one device program either
+        way).  Same lazy-resolution contract as the scalar flag."""
+        shape = self.counts.shape[:-1]
+        if self.monotone_cols is None:
+            if self.monotone is True:
+                # the scalar flag is the AND of the lanes, so only True
+                # determines them all; False means *some* lane violates.
+                self.monotone_cols = np.ones(shape, dtype=bool)
+            else:
+                self.monotone_cols = np.asarray(
+                    _monotone_lanes_jit(self.xs, self.ss, self.counts)
+                ).reshape(shape)
+        return self.monotone_cols
 
     # -- the jitted partitioners --------------------------------------------
 
@@ -689,15 +758,17 @@ class JaxModelBank:
         )
 
     def partition_units(
-        self, n, caps=None, *, min_units: int = 0, max_steps: int = 200,
+        self, n, caps=None, *, min_units=0, max_steps: int = 200,
         with_t: bool = False, completion: str = "auto",
+        completion_lanes=None,
     ) -> np.ndarray:
         """Integer partition on device; host-side feasibility checks raise
         the same ``ValueError`` s as the scalar and numpy-bank paths.
 
         ``n`` is a scalar (or ``[q]`` for a stacked bank, partitioning every
-        column simultaneously).  Returns the host ``int`` allocation array;
-        with ``with_t=True`` returns ``(allocations, t_star)`` — the inner
+        column simultaneously); ``min_units`` may likewise be per-column on a
+        stacked bank.  Returns the host ``int`` allocation array; with
+        ``with_t=True`` returns ``(allocations, t_star)`` — the inner
         continuous solve's equal-time point, at zero extra device work.
 
         ``completion`` routes the integer completion (see the "completion
@@ -706,20 +777,40 @@ class JaxModelBank:
         jitted bisection instead of ~p/2 sequential argmin iterations —
         the p=10^5 millisecond-repartition path), ``"greedy"`` forces the
         exact per-unit loop, ``"threshold"`` forces the bulk grant
-        (benchmark-only on non-monotone banks).
+        (benchmark-only on non-monotone banks).  On a stacked bank ``"auto"``
+        routes *per column* (``monotone_lanes``), so an adversarial column
+        demotes only itself; ``completion_lanes`` (a ``[q]`` bool mask, used
+        by the fleet scheduler) overrides the routing explicitly — True
+        lanes take the bulk grant, False lanes the exact loop — keeping
+        mixed-mode fleets in one device program.
         """
         if completion not in ("auto", "threshold", "greedy"):
             raise ValueError(f"unknown completion mode {completion!r}")
-        fast = completion == "threshold" or (
-            completion == "auto" and self.is_monotone()
-        )
         shape = self.counts.shape
         p = shape[-1]
+        if completion_lanes is not None:
+            lanes_host = np.array(
+                np.broadcast_to(np.asarray(completion_lanes, dtype=bool), shape[:-1])
+            )
+        elif completion == "threshold":
+            lanes_host = np.ones(shape[:-1], dtype=bool)
+        elif completion == "greedy":
+            lanes_host = np.zeros(shape[:-1], dtype=bool)
+        elif self.counts.ndim >= 2:
+            lanes_host = self.monotone_lanes()  # per-column auto routing
+        else:
+            lanes_host = np.full(shape[:-1], self.is_monotone(), dtype=bool)
+        fast = bool(np.any(lanes_host))
         n_host = np.broadcast_to(np.asarray(n), shape[:-1])
         if np.any(n_host < 0):
             raise ValueError("n must be non-negative")
-        if np.any(min_units * p > n_host):
-            raise ValueError(f"min_units={min_units} infeasible for n={n}, p={p}")
+        mu_host = np.broadcast_to(np.asarray(min_units, dtype=np.int64), shape[:-1])
+        if np.any(mu_host * p > n_host):
+            i = int(np.argmax(np.reshape(mu_host * p > n_host, (-1,))))
+            raise ValueError(
+                f"min_units={int(np.reshape(mu_host, (-1,))[i])} infeasible for "
+                f"n={int(np.reshape(n_host, (-1,))[i])}, p={p}"
+            )
         idtype = self.counts.dtype
         # Host-side caps first (validation below), one device upload after —
         # no blocking device->host round-trips on the repartition hot path.
@@ -729,11 +820,12 @@ class JaxModelBank:
             )
         else:
             caps_host = np.broadcast_to(np.asarray(caps, dtype=np.int64), shape)
-        if min_units > 0 and np.any(caps_host < min_units):
-            i = int(np.argmax(np.reshape(caps_host < min_units, (-1,))))
+        under = (caps_host < mu_host[..., None]) & (mu_host[..., None] > 0)
+        if np.any(under):
+            i = int(np.argmax(np.reshape(under, (-1,))))
             raise ValueError(
-                f"min_units={min_units} infeasible: cap {int(caps_host.reshape(-1)[i])}"
-                f" < min_units"
+                f"min_units={int(np.reshape(mu_host, (-1,))[i // p])} "
+                f"infeasible: cap {int(caps_host.reshape(-1)[i])} < min_units"
             )
         clipped = np.minimum(caps_host.astype(np.float64), n_host[..., None].astype(np.float64))
         short = clipped.sum(axis=-1) < n_host
@@ -748,9 +840,10 @@ class JaxModelBank:
             self.xs, self.ss, self.counts,
             jnp.asarray(caps_host, idtype),
             jnp.asarray(n_host),
-            jnp.asarray(int(min_units), idtype),
+            jnp.asarray(mu_host, idtype),
             jnp.asarray(1e-12, self.dtype),
             max_steps,
+            jnp.asarray(lanes_host),
             completion_fast=fast,
         )
         if not bool(np.all(np.asarray(ok))):

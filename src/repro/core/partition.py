@@ -337,10 +337,13 @@ def _partition_units_bank(
     ``completion`` selects how the leftover units are placed (see the
     "completion modes" section in ``modelbank.py``): ``"greedy"`` is the
     per-unit lazy heap, ``"threshold"`` forces the threshold-count bulk
-    grant, ``"auto"`` (default) uses threshold-count iff the bank is
-    monotone-time.  All modes share the heap for the final boundary units,
-    so tie-breaking is identical: each unit goes to the processor with the
-    smallest ``(time(d+1), -frac_remainder, index)``.
+    grant, ``"auto"`` (default) keeps the lazy heap ON THIS HOST PATH —
+    the heap was never the numpy bottleneck, and the threshold pass costs
+    ~one extra continuous solve here, so auto only routes to threshold-count
+    on the jitted backends (where the per-unit ``while_loop``'s serial
+    dispatch dominated).  All modes share the heap for the final boundary
+    units, so tie-breaking is identical: each unit goes to the processor
+    with the smallest ``(time(d+1), -frac_remainder, index)``.
     """
     if completion not in ("auto", "threshold", "greedy"):
         raise ValueError(f"unknown completion mode {completion!r}")
@@ -367,10 +370,12 @@ def _partition_units_bank(
             k += 1
 
     rem = xs - np.floor(xs)
-    if leftover > 0 and (
-        completion == "threshold"
-        or (completion == "auto" and bank.is_monotone())
-    ):
+    # "auto" deliberately skips the threshold prefill here: on the host path
+    # it costs ~one extra continuous solve while the lazy heap below is
+    # already cheap (the prefill pays off only on the jitted backends, where
+    # "auto" does engage it for monotone banks).  Forcing "threshold" is
+    # still honoured — monotonicity is the caller's claim then.
+    if leftover > 0 and completion == "threshold":
         d, leftover = _threshold_prefill_bank(bank, d, caps_arr, leftover, t_star)
     if leftover > 0:
         # Initial candidate times at d+1 for the whole bank in one pass; each

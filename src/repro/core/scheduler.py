@@ -36,6 +36,27 @@ Every method returns (where a distribution is produced) a single typed
 :class:`Partition` instead of the previous mix of bare lists,
 ``DFPAResult`` and ``Grid2DResult``; the legacy entry points survive as thin
 deprecation shims that delegate here.
+
+The fleet layer (multi-tenant scheduling)
+-----------------------------------------
+
+One ``Scheduler`` owns ONE job.  For q *concurrent* jobs over the same
+platform, ``repro.fleet.FleetScheduler`` multiplexes this exact per-job
+state machine (its rounds are fuzz-locked bit-identical to q independent
+``autotune`` loops) while batching the device work: the fleet — not the
+per-job stores — owns a single stacked ``[q, p, k]`` ``JaxModelBank`` as a
+donated carry, updated in place by one fold-in program per round and
+REBUILT ("restacked") lazily from the per-job scalar estimates only when
+``admit``/``retire``/``resize`` changes the lane set.  One fleet round is
+one stacked repartition + one batched measurement + one stacked fold-in,
+regardless of q; ``rebalance`` is the serving steady-state variant (one
+program, no measurement).  ``_grid_dfpa`` below drives its per-column inner
+DFPA loops through that same driver (one job per column), so a 2-D outer
+round is one device program rather than q sequential Python loops.  Partial
+estimates persist across sessions in ``repro.fleet.ProfileRegistry``, keyed
+by ``(device_class, workload_tag)`` — one entry per hardware class and
+workload, NOT per processor, merged back on ``retire`` and consulted on
+``admit`` for warm starts.
 """
 
 from __future__ import annotations
@@ -46,7 +67,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .executor import Executor, SimulatedExecutor
+from .executor import BatchedSimulatedExecutor2D, Executor
 from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
 from .modelbank import ModelBank
 from .partition2d import _col_times, _flat_imbalance, _rebalance_widths
@@ -164,8 +185,10 @@ class Scheduler:
         if completion not in ("auto", "threshold", "greedy"):
             raise ValueError(f"unknown completion mode {completion!r}")
         # Integer-completion routing for every partition this session makes:
-        # "auto" = threshold-count on monotone banks (the p=10^5 fast path),
-        # exact per-unit greedy otherwise; see modelbank.py "completion modes".
+        # "auto" = threshold-count on monotone banks on the jitted backend
+        # (the p=10^5 fast path), exact per-unit greedy otherwise — including
+        # always on the numpy host path, where the heap was never the
+        # bottleneck; see modelbank.py "completion modes".
         # On the session knob "threshold" means "wherever one exists":
         # scalar-backed stores (non-piecewise models, forced baselines) are
         # demoted to their exact loop by _completion_for — the strict
@@ -690,65 +713,97 @@ class Scheduler:
         prev_widths: Optional[List[int]] = None
         best: Optional[Partition] = None
 
+        # The per-column inner DFPA loops run through the fleet driver: all
+        # columns needing a re-benchmark this outer round become jobs of ONE
+        # FleetScheduler, so their measurement rounds advance in lock-step —
+        # on the jax backend every inner round is a single stacked device
+        # program (the ROADMAP "inner-DFPA column batching" item) instead of
+        # q sequential Python loops with q separate banks.  Per-column
+        # results are bit-identical to the sequential child-Scheduler loops
+        # (the fleet parity contract).
+        from ..fleet import FleetScheduler, JobSpec
+
         for outer in range(1, max_outer + 1):
             col_round_costs = [0.0] * q
+            run_cols: List[int] = []
             for j in range(q):
-                w = widths[j]
                 if (
                     prev_widths is not None
                     and rows[j] is not None
-                    and w == prev_widths[j]
+                    and widths[j] == prev_widths[j]
                 ):
                     # Paper's optimization: width unchanged -> keep the
                     # column's partition; no re-benchmark needed.
                     times[j] = _col_times(grid, j, widths, rows[j])
-                    continue
-                # Rescale surviving FPM points to the new width (g ~ const in
-                # w): one batched speed-scale over the column's model bank.
-                warm = None
-                if all(
-                    fpm_width[i][j] is not None and fpms[i][j].num_points > 0
-                    for i in range(p)
-                ):
-                    col_bank = ModelBank.from_models([fpms[i][j] for i in range(p)])
-                    scale = [fpm_width[i][j] / w for i in range(p)]
-                    warm = col_bank.scaled(scale).to_models()
-                ex = SimulatedExecutor(
-                    time_fns=[
-                        (lambda i_: lambda r: (r * w) / grid[i_][j](float(r), float(w)) if r > 0 else 0.0)(i)
+                else:
+                    run_cols.append(j)
+            if run_cols:
+                fleet = FleetScheduler(p, backend=self._backend, dtype=self.dtype)
+                for j in run_cols:
+                    w = widths[j]
+                    # Rescale surviving FPM points to the new width (g ~
+                    # const in w): one batched speed-scale over the column's
+                    # model bank.
+                    warm = None
+                    if all(
+                        fpm_width[i][j] is not None and fpms[i][j].num_points > 0
                         for i in range(p)
-                    ]
-                )
-                child = Scheduler(
-                    SpeedStore.from_models(
-                        [PiecewiseLinearFPM.from_points(m.as_points()) for m in warm],
-                        backend=self._backend, dtype=self.dtype,
+                    ):
+                        col_bank = ModelBank.from_models(
+                            [fpms[i][j] for i in range(p)]
+                        )
+                        scale = [fpm_width[i][j] / w for i in range(p)]
+                        warm = col_bank.scaled(scale).to_models()
+                    fleet.admit(
+                        JobSpec(
+                            name=f"col{j}",
+                            n=M,
+                            eps=eps,
+                            min_units=min_units,
+                            max_iter=inner_max_iter,
+                            completion=self.completion,
+                            warm_start_d=rows[j] if rows[j] is not None else None,
+                            # Probe fixed points only on the COLD first
+                            # partition of a column; warm refinements rely on
+                            # the outer width update for fresh information —
+                            # unbounded probing churned 2256 rounds / 76%
+                            # cost at M=N=768.
+                            probe_budget=p if warm is None else 0,
+                        ),
+                        models=warm,
                     )
-                    if warm is not None
-                    else SpeedStore.empty(p, backend=self._backend, dtype=self.dtype),
-                    policy=Policy.DFPA,
-                    backend=self._backend,
-                    completion=self.completion,
+
+                def _col_batch_time(X, cols=tuple(run_cols), ws=tuple(widths)):
+                    T = np.zeros_like(X)
+                    for k, j in enumerate(cols):
+                        w = ws[j]
+                        for i in range(p):
+                            r = X[k, i]
+                            T[k, i] = (
+                                (r * w) / grid[i][j](float(r), float(w))
+                                if r > 0
+                                else 0.0
+                            )
+                    return T
+
+                fleet.run(
+                    BatchedSimulatedExecutor2D(
+                        time_fn_batch_2d=_col_batch_time,
+                        p=p,
+                        q=len(run_cols),
+                        job_names=[f"col{j}" for j in run_cols],
+                    )
                 )
-                res = child.autotune(
-                    ex, M, eps,
-                    max_iter=inner_max_iter,
-                    min_units=min_units,
-                    warm_start_d=rows[j] if rows[j] is not None else None,
-                    # Probe fixed points only on the COLD first partition of a
-                    # column; warm refinements rely on the outer width update
-                    # for fresh information — unbounded probing churned 2256
-                    # rounds / 76% cost at M=N=768.
-                    probe_budget=p if warm is None else 0,
-                )
-                rows[j] = list(res.allocations)
-                times[j] = list(res.times)
-                col_models = res.diagnostics["models"]
-                for i in range(p):
-                    fpms[i][j] = col_models[i]
-                    fpm_width[i][j] = w
-                total_rounds += res.iterations
-                col_round_costs[j] = ex.total_cost
+                for j in run_cols:
+                    res = fleet.result(f"col{j}")
+                    rows[j] = list(res.allocations)
+                    times[j] = list(res.times)
+                    col_models = res.diagnostics["models"]
+                    for i in range(p):
+                        fpms[i][j] = col_models[i]
+                        fpm_width[i][j] = widths[j]
+                    total_rounds += res.iterations
+                    col_round_costs[j] = res.diagnostics["bench_cost"]
             # Columns run their inner DFPA in parallel -> cost = slowest col.
             bench_cost += max(col_round_costs) if col_round_costs else 0.0
 

@@ -488,10 +488,11 @@ class SpeedStore:
 
         ``completion`` routes the integer completion on the banked backends
         (see the "completion modes" section in ``modelbank.py``): ``"auto"``
-        — threshold-count iff the bank's monotone-time flag holds, per-unit
-        greedy otherwise; ``"greedy"`` / ``"threshold"`` force a mode.  The
-        scalar backend always runs its exact per-unit loop and refuses
-        ``"threshold"``.
+        — threshold-count on the *jax* backend iff the bank's monotone-time
+        flag holds, the exact per-unit loop otherwise and always on the
+        numpy host path (where the heap was never the bottleneck);
+        ``"greedy"`` / ``"threshold"`` force a mode.  The scalar backend
+        always runs its exact per-unit loop and refuses ``"threshold"``.
         """
         if completion not in ("auto", "threshold", "greedy"):
             raise ValueError(f"unknown completion mode {completion!r}")

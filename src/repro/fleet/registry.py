@@ -1,0 +1,215 @@
+"""Persistent profile registry: partial speed-function estimates that
+outlive the session that measured them.
+
+The paper's economic argument is that *partial* estimates — a handful of
+(size, speed) points per processor — are already sufficient for a given
+accuracy.  Those points are expensive only the first time: they are paid for
+in real measurement rounds (CPM probes, DFPA iterations).  A multi-tenant
+fleet sees the same (device class, workload) pairs over and over, so the
+registry keys each partial estimate by ``(device_class, workload_tag)`` and
+merges it back in when a new job is admitted: the newcomer's first
+distribution is computed from *yesterday's* points instead of an even split,
+and the DFPA loop starts from round ~k instead of round 1 (the warm-start
+path of ``Scheduler.autotune`` / ``FleetScheduler.admit``).
+
+Key scheme
+----------
+
+One entry per ``(device_class, workload_tag)`` — NOT per processor: two A100
+groups running the same decode workload share a speed function up to noise,
+and sharing the entry is exactly what makes the registry useful for a job
+that lands on *different* processors of the same classes.  Entries hold
+plain ``[(x, speed), ...]`` point lists, the same representation as
+``PiecewiseLinearFPM.as_points()`` / the ``SpeedStore.state_dict``
+``points`` field, and merging follows ``add_point`` semantics: a duplicate
+``x`` replaces the stored speed (freshest observation wins), anything else
+sorted-inserts.
+
+Failure policy
+--------------
+
+A registry must never take a fleet down: a missing file, corrupt JSON, or a
+malformed entry degrades to a cold start with a ``UserWarning`` — the job
+just pays the measurement rounds it would have paid without a registry.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.fpm import PiecewiseLinearFPM
+
+__all__ = ["ProfileRegistry"]
+
+Point = Tuple[float, float]
+
+
+def _valid_points(points) -> Optional[List[Point]]:
+    """Validate one entry's point list; None (not a raise) on any malformed
+    shape — the caller warns and falls back to a cold start."""
+    try:
+        out = [(float(x), float(s)) for x, s in points]
+    except (TypeError, ValueError):
+        return None
+    if not out:
+        return None
+    for x, s in out:
+        if not (x > 0.0 and s > 0.0) or x != x or s != s or x == float("inf") or s == float("inf"):
+            return None
+    if any(b[0] < a[0] for a, b in zip(out, out[1:])):
+        return None
+    return out
+
+
+class ProfileRegistry:
+    """(device-class, workload-tag)-keyed store of partial FPM estimates.
+
+    ``get``/``record`` are the in-memory protocol; ``state_dict``/
+    ``from_state`` mirror the repo's persistence convention and
+    ``save``/``load`` wrap them in JSON-on-disk.  ``warm_models`` and
+    ``record_job`` are the fleet-facing pair: models out on admit, points
+    back on retire.
+    """
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[Dict[Tuple[str, str], List[Point]]] = None):
+        self._entries: Dict[Tuple[str, str], List[Point]] = dict(entries or {})
+
+    # -- in-memory protocol ---------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple[str, str]) -> bool:
+        return tuple(key) in self._entries
+
+    def keys(self):
+        return self._entries.keys()
+
+    def get(self, device_class: str, workload: str) -> Optional[List[Point]]:
+        """The stored points for one (class, workload) pair, or None."""
+        pts = self._entries.get((str(device_class), str(workload)))
+        if pts is None:
+            return None
+        ok = _valid_points(pts)
+        if ok is None:
+            warnings.warn(
+                f"profile registry entry ({device_class!r}, {workload!r}) is "
+                "malformed; ignoring it (cold start)",
+                UserWarning,
+                stacklevel=2,
+            )
+            return None
+        return list(ok)
+
+    def record(self, device_class: str, workload: str, points: Sequence[Point]) -> None:
+        """Merge one estimate's points into its entry (``add_point``
+        semantics: duplicate ``x`` replaces — freshest observation wins)."""
+        key = (str(device_class), str(workload))
+        merged = PiecewiseLinearFPM.from_points(self._entries.get(key, []))
+        for x, s in points:
+            merged.add_point(float(x), float(s))
+        self._entries[key] = [(float(x), float(s)) for x, s in merged.as_points()]
+
+    # -- the fleet-facing pair ------------------------------------------------
+
+    def warm_models(
+        self, device_classes: Sequence[str], workload: Optional[str]
+    ) -> List[PiecewiseLinearFPM]:
+        """One model per processor, warm where the registry has a valid
+        entry for that processor's class, empty (cold) otherwise."""
+        models = []
+        for cls_ in device_classes:
+            pts = self.get(cls_, workload) if workload is not None else None
+            models.append(
+                PiecewiseLinearFPM.from_points(pts) if pts else PiecewiseLinearFPM()
+            )
+        return models
+
+    def record_job(
+        self,
+        device_classes: Sequence[str],
+        workload: Optional[str],
+        models: Sequence[PiecewiseLinearFPM],
+    ) -> None:
+        """Fold a retiring job's learned estimates back in, processor by
+        processor in index order (same-class processors merge into one
+        entry; deterministic, so a registry round-trip is reproducible)."""
+        if workload is None:
+            return
+        for cls_, m in zip(device_classes, models):
+            pts = m.as_points() if getattr(m, "num_points", 0) > 0 else []
+            if pts:
+                self.record(cls_, workload, pts)
+
+    # -- persistence (the state_dict protocol + JSON on disk) -----------------
+
+    def state_dict(self) -> Dict:
+        return {
+            "version": self.VERSION,
+            "entries": [
+                {"device_class": c, "workload": w, "points": [[x, s] for x, s in pts]}
+                for (c, w), pts in sorted(self._entries.items())
+            ],
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "ProfileRegistry":
+        entries: Dict[Tuple[str, str], List[Point]] = {}
+        raw = state.get("entries")
+        if not isinstance(raw, list):
+            raise ValueError("registry state has no entries list")
+        for e in raw:
+            pts = _valid_points(e.get("points", []))
+            if pts is None:
+                warnings.warn(
+                    f"skipping malformed registry entry "
+                    f"({e.get('device_class')!r}, {e.get('workload')!r})",
+                    UserWarning,
+                    stacklevel=2,
+                )
+                continue
+            entries[(str(e["device_class"]), str(e["workload"]))] = pts
+        return cls(entries)
+
+    def save(self, path: str) -> None:
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.state_dict(), f, indent=1)
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "ProfileRegistry":
+        """Load from disk; ANY failure — missing file, corrupt JSON, wrong
+        shape — warns and returns an empty registry (cold start), never
+        raises: a broken profile cache must not take the fleet down."""
+        try:
+            with open(path) as f:
+                state = json.load(f)
+        except FileNotFoundError:
+            warnings.warn(
+                f"profile registry {path!r} not found; starting cold",
+                UserWarning,
+                stacklevel=2,
+            )
+            return cls()
+        except (OSError, json.JSONDecodeError) as e:
+            warnings.warn(
+                f"profile registry {path!r} unreadable ({e}); starting cold",
+                UserWarning,
+                stacklevel=2,
+            )
+            return cls()
+        try:
+            return cls.from_state(state)
+        except (ValueError, KeyError, TypeError) as e:
+            warnings.warn(
+                f"profile registry {path!r} malformed ({e}); starting cold",
+                UserWarning,
+                stacklevel=2,
+            )
+            return cls()

@@ -1,0 +1,715 @@
+"""FleetScheduler: q concurrent jobs, one stacked bank, one device program
+per measurement round.
+
+The paper's loop is cheap enough to run *during* execution — which means one
+heterogeneous fleet can serve many concurrent applications, re-estimating
+and re-partitioning each of them online.  ``Scheduler`` (``core/scheduler``)
+owns ONE job; q concurrent jobs driven through it cost q sequential Python
+DFPA loops and q separate device banks: every outer round issues q
+``t*``-bisection programs and q fold-in programs, and the dispatch overhead
+— not the math — dominates at serving scale.
+
+``FleetScheduler`` multiplexes the SAME per-job state machine as
+``Scheduler.autotune`` (measure → fold → eps test → repartition → seen-set
+probe escape), but lock-steps all admitted jobs so that one *fleet round*
+is:
+
+  1. ONE stacked repartition — every job needing a new distribution gets it
+     from a single ``[q, p, k]`` ``JaxModelBank.partition_units`` call
+     (per-job ``n``, caps, ``min_units`` and per-lane completion routing all
+     ride the batch dims);
+  2. ONE batched measurement — a :class:`~repro.core.executor.FleetExecutor`
+     (e.g. ``BatchedSimulatedExecutor2D``) runs every measuring job's
+     distribution in one call;
+  3. ONE stacked fold-in — all jobs' observations enter the device carry
+     via a single vectorized sorted insert (buffers donated off-CPU).
+
+Per-job results surface as the existing typed
+:class:`~repro.core.scheduler.Partition`, bit-identical — allocations AND
+folded estimates — to what q independent ``Scheduler.autotune`` loops would
+have produced (the contract ``tests/test_fleet.py`` fuzz-locks, including
+mid-flight ``admit``/``retire`` and adversarial non-monotone jobs that
+demote only their own lane's completion).
+
+Ownership and restacking
+------------------------
+
+The per-job scalar estimates (``PiecewiseLinearFPM`` lists) are the source
+of truth; the stacked device bank is a derived carry, updated in place by
+the per-round fold-in and REBUILT lazily ("restacked") only when the lane
+set changes — ``admit``/``retire``/``resize`` mark it dirty and the next
+round pays one restack.  Jobs that converge stay in the stack (masked out of
+the repartition and fold) so steady-state rounds keep a single compiled
+program shape; their lanes are reclaimed at the next restack.
+
+The 2-D grid partitioner (``Scheduler._grid_dfpa``) drives its per-column
+inner DFPA loops through this same driver — one fleet, one column per job —
+closing the ROADMAP's "inner-DFPA column batching" item.
+
+Profile registry
+----------------
+
+With a :class:`~repro.fleet.registry.ProfileRegistry` attached (and
+``device_classes`` naming each processor's hardware class), ``admit`` merges
+previously saved partial estimates keyed by ``(device_class,
+spec.workload)`` into the new job's models, so it warm-starts from a
+repartition instead of the cold even split; ``retire`` folds what the job
+learned back into the registry.  See ``registry.py`` for the key scheme and
+the corrupt-entry fallback policy.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.fpm import PiecewiseLinearFPM, imbalance
+from ..core.modelbank import ModelBank
+from ..core.partition import (
+    _partition_units_bank,
+    _partition_units_scalar,
+    _prep_unit_caps,
+)
+from ..core.scheduler import Partition, Policy, _even, _probe_neighbour
+from .registry import ProfileRegistry
+
+__all__ = ["JobSpec", "FleetScheduler"]
+
+
+@dataclass
+class JobSpec:
+    """Everything one tenant asks of the fleet.
+
+    ``n`` is the job's unit count (its own problem size; jobs need not
+    agree), ``eps`` its convergence target, ``caps``/``min_units`` its
+    per-processor allocation bounds, ``max_iter``/``probe_budget`` its DFPA
+    loop limits (same defaults as ``Scheduler.autotune``), ``completion``
+    its integer-completion routing ("auto" routes this job's lane by ITS
+    bank's monotonicity), and ``workload`` the registry tag its profile is
+    saved/warm-started under.
+    """
+
+    name: str
+    n: int
+    eps: float = 0.1
+    caps: Optional[Sequence[int]] = None
+    min_units: int = 0
+    max_iter: int = 100
+    probe_budget: Optional[int] = None
+    completion: str = "auto"
+    workload: Optional[str] = None
+    warm_start_d: Optional[Sequence[int]] = None
+
+
+@dataclass
+class _Job:
+    """One job's DFPA loop state — the exact per-job carry of
+    ``Scheduler.autotune``, multiplexed by the fleet driver."""
+
+    spec: JobSpec
+    models: List[PiecewiseLinearFPM]
+    probes_left: int
+    probe_budget: int
+    icaps: np.ndarray  # validated per-processor caps (admit/resize time)
+    empty_rows: np.ndarray  # hosts-side counts==0 mirror, updated per fold
+    lane: int = -1  # index into the current stacked bank
+    status: str = "new"  # new -> running -> done
+    d: List[int] = field(default_factory=list)
+    times: List[float] = field(default_factory=list)
+    pending_d: Optional[List[int]] = None  # chosen for this round's measure
+    it: int = 0  # measurement rounds executed
+    seen: Dict[Tuple[int, ...], List[float]] = field(default_factory=dict)
+    history: List[Tuple[List[int], List[float]]] = field(default_factory=list)
+    best_d: List[int] = field(default_factory=list)
+    best_t: List[float] = field(default_factory=list)
+    best_imb: float = float("inf")
+    bench_cost: float = 0.0
+    result: Optional[Partition] = None
+    # observations not yet materialized into `models`: the device carry is
+    # updated eagerly every round, but the scalar mirrors are only needed
+    # when somebody reads them (restack, retire, registry save, results) —
+    # deferring the per-point inserts keeps the hot round free of O(q p)
+    # Python work.
+    pending_obs: List[Tuple[List[int], List[float]]] = field(default_factory=list)
+    # host-side bank cache over `models`, dropped on every fold
+    _bank: Optional[ModelBank] = None
+
+    def flush(self) -> None:
+        """Materialize deferred observations into the scalar models (same
+        add_point order as an eager mirror, so the result is identical)."""
+        for d, t in self.pending_obs:
+            for i, (di, ti) in enumerate(zip(d, t)):
+                if di > 0 and ti > 0:
+                    self.models[i].add_point(float(di), di / ti)
+        self.pending_obs.clear()
+
+    def bank(self) -> ModelBank:
+        if self._bank is None:
+            self.flush()
+            self._bank = ModelBank.from_models(self.models)
+        return self._bank
+
+    def invalidate(self) -> None:
+        self._bank = None
+
+
+class FleetScheduler:
+    """Multi-tenant lock-step DFPA over one heterogeneous fleet.
+
+    Construct for a fleet of ``num_procs`` processor groups, ``admit`` jobs,
+    then drive rounds with :meth:`step` (or :meth:`run` until every job
+    converges).  ``backend="jax"`` (default) keeps the single stacked
+    ``[q, p, k]`` bank on device and spends exactly one partition program
+    and one fold-in program per round regardless of q; ``backend="numpy"``
+    (or ``"scalar"``, the seed per-model loop) runs the same state machine
+    over per-job host paths (no batching win, same results — the
+    CI-friendly reference).
+    """
+
+    def __init__(
+        self,
+        num_procs: int,
+        *,
+        backend: str = "jax",
+        dtype=None,
+        registry: Optional[ProfileRegistry] = None,
+        device_classes: Optional[Sequence[str]] = None,
+        alpha: Optional[float] = None,  # collective-cost overrides for
+        beta: Optional[float] = None,  # executors without alpha/beta attrs
+    ):
+        if backend not in ("scalar", "numpy", "jax"):
+            raise ValueError(f"unknown backend {backend!r}")
+        p = int(num_procs)
+        if p < 1:
+            raise ValueError("need at least one processor")
+        self.p = p
+        self._backend = backend
+        self.dtype = dtype
+        self.registry = registry
+        if device_classes is not None and len(device_classes) != p:
+            raise ValueError("device_classes length != num_procs")
+        self.device_classes = (
+            [str(c) for c in device_classes] if device_classes is not None else None
+        )
+        self._alpha, self._beta = alpha, beta
+        self._jobs: Dict[str, _Job] = {}
+        self._stacked = None  # the [q, p, k] device carry (jax backend)
+        self._stack_names: List[str] = []
+        self._stack_dirty = True
+        self.rounds = 0
+        self.restacks = 0
+        # device program launches (stacked partitions + fold-ins): THE
+        # dispatch-count metric benchmarks/fleet_scale.py compares against
+        # q independent Scheduler loops (which pay 2q per round).
+        self.device_dispatches = 0
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def backend(self) -> str:
+        return self._backend
+
+    @property
+    def num_procs(self) -> int:
+        return self.p
+
+    @property
+    def jobs(self) -> List[str]:
+        return list(self._jobs)
+
+    @property
+    def active_jobs(self) -> List[str]:
+        return [n for n, j in self._jobs.items() if j.status != "done"]
+
+    def models(self, name: str) -> List[PiecewiseLinearFPM]:
+        job = self._jobs[name]
+        job.flush()
+        return job.models
+
+    def distribution(self, name: str) -> List[int]:
+        return list(self._jobs[name].d)
+
+    def bench_cost(self, name: str) -> float:
+        return self._jobs[name].bench_cost
+
+    def iterations(self, name: str) -> int:
+        return self._jobs[name].it
+
+    def result(self, name: str) -> Partition:
+        job = self._jobs[name]
+        if job.result is None:
+            raise ValueError(f"job {name!r} has not finished")
+        return job.result
+
+    def snapshot(self, name: str) -> Partition:
+        """Current state as a Partition — the finished result for done jobs,
+        a live (non-converged) view for running ones."""
+        job = self._jobs[name]
+        if job.result is not None:
+            return job.result
+        job.flush()
+        t = list(job.times)
+        return Partition(
+            allocations=list(job.d),
+            t_star=None,
+            makespan=max(t) if t else None,
+            imbalance=imbalance(t) if t else float("inf"),
+            converged=False,
+            iterations=job.it,
+            policy=Policy.DFPA,
+            backend=self._backend,
+            times=t,
+            diagnostics={"history": job.history, "models": job.models,
+                         "bench_cost": job.bench_cost},
+        )
+
+    # -- membership -----------------------------------------------------------
+
+    def admit(self, spec: JobSpec, models: Optional[Sequence[Any]] = None) -> str:
+        """Admit one job.  Validation mirrors ``Scheduler.autotune`` (n >= p,
+        eps > 0, cap feasibility) but fires here, naming the job, instead of
+        mid-round.  ``models`` warm-starts from explicit estimates (copied);
+        otherwise the profile registry is consulted under
+        ``(device_class, spec.workload)``; otherwise the job starts cold
+        (even first split, exactly the paper's step 1)."""
+        name = str(spec.name)
+        if name in self._jobs:
+            raise ValueError(f"job {name!r} already admitted")
+        if spec.completion not in ("auto", "threshold", "greedy"):
+            raise ValueError(f"unknown completion mode {spec.completion!r}")
+        n = int(spec.n)
+        if n < self.p:
+            raise ValueError(f"DFPA requires n >= p (n={n}, p={self.p})")
+        if float(spec.eps) <= 0:
+            raise ValueError("eps must be positive")
+        _prep_unit_caps(self.p, n, spec.caps, int(spec.min_units))
+        if spec.warm_start_d is not None:
+            w = [int(v) for v in spec.warm_start_d]
+            if sum(w) != n or len(w) != self.p:
+                raise ValueError("warm_start_d must be a length-p partition of n")
+        if models is not None:
+            if len(models) != self.p:
+                raise ValueError("models length != num_procs")
+            job_models = [
+                PiecewiseLinearFPM.from_points(m.as_points())
+                if getattr(m, "num_points", 0) > 0
+                else PiecewiseLinearFPM()
+                for m in models
+            ]
+        elif (
+            self.registry is not None
+            and spec.workload is not None
+            and self.device_classes is not None
+        ):
+            job_models = self.registry.warm_models(self.device_classes, spec.workload)
+        else:
+            job_models = [PiecewiseLinearFPM() for _ in range(self.p)]
+        budget = int(spec.probe_budget) if spec.probe_budget is not None else 2 * self.p
+        self._jobs[name] = _Job(
+            spec=spec,
+            models=job_models,
+            probes_left=budget,
+            probe_budget=budget,
+            icaps=np.asarray(
+                _prep_unit_caps(self.p, n, spec.caps, int(spec.min_units)),
+                dtype=np.int64,
+            ),
+            empty_rows=np.asarray(
+                [getattr(m, "num_points", 0) == 0 for m in job_models], dtype=bool
+            ),
+        )
+        self._stack_dirty = True
+        return name
+
+    def retire(self, name: str, *, save_profile: bool = True) -> Optional[Partition]:
+        """Remove a job (its lane is reclaimed at the next restack).  The
+        learned profile is folded into the registry unless
+        ``save_profile=False``.  Returns the final Partition — the converged
+        result for done jobs, a best-so-far snapshot for running ones, None
+        for jobs that never measured."""
+        job = self._jobs.pop(name)
+        job.flush()
+        self._stack_dirty = True
+        if (
+            save_profile
+            and self.registry is not None
+            and self.device_classes is not None
+        ):
+            self.registry.record_job(self.device_classes, job.spec.workload, job.models)
+        if job.result is not None:
+            return job.result
+        if job.it == 0:
+            return None
+        self._finish(job, job.best_d, job.best_t, job.best_imb <= job.spec.eps,
+                     job.best_imb)
+        return job.result
+
+    def resize(
+        self,
+        name: str,
+        *,
+        n: Optional[int] = None,
+        caps=...,
+        eps: Optional[float] = None,
+        min_units: Optional[int] = None,
+    ) -> None:
+        """Change a running job's shape.  The job keeps its learned
+        estimates but resets its loop state (seen set, best trackers, probe
+        budget, round count) — from the next round it behaves exactly like a
+        freshly admitted job warm-started from the same models (its first
+        new-``n`` distribution is a repartition, not an even split, whenever
+        every model has a point)."""
+        job = self._jobs[name]
+        s = job.spec
+        spec = JobSpec(
+            name=s.name,
+            n=int(n) if n is not None else s.n,
+            eps=float(eps) if eps is not None else s.eps,
+            caps=s.caps if caps is ... else caps,
+            min_units=int(min_units) if min_units is not None else s.min_units,
+            max_iter=s.max_iter,
+            probe_budget=s.probe_budget,
+            completion=s.completion,
+            workload=s.workload,
+            warm_start_d=None,
+        )
+        if spec.n < self.p:
+            raise ValueError(f"DFPA requires n >= p (n={spec.n}, p={self.p})")
+        if float(spec.eps) <= 0:
+            raise ValueError("eps must be positive")
+        job.icaps = np.asarray(
+            _prep_unit_caps(self.p, spec.n, spec.caps, int(spec.min_units)),
+            dtype=np.int64,
+        )
+        job.spec = spec
+        job.status = "new"
+        job.result = None
+        job.it = 0
+        job.seen = {}
+        job.history = []
+        job.best_d, job.best_t, job.best_imb = [], [], float("inf")
+        job.probes_left = job.probe_budget
+        job.pending_d = None
+        # the bank itself is unchanged — no restack needed
+
+    # -- the lock-step round driver -------------------------------------------
+
+    def step(self, executor) -> Dict[str, Partition]:
+        """One fleet round: batched repartition -> batched measurement ->
+        stacked fold-in -> per-job convergence settle.  Returns the jobs
+        that FINISHED this round (name -> Partition)."""
+        if executor.num_procs != self.p:
+            raise ValueError(
+                f"executor has {executor.num_procs} processors, fleet has {self.p}"
+            )
+        finished: Dict[str, Partition] = {}
+        jobs = list(self._jobs.values())
+        if not any(j.status != "done" for j in jobs):
+            return finished
+
+        # Phase 1: choose this round's distributions.  New jobs follow
+        # autotune's initial rule (warm_start_d | warm repartition | even);
+        # running jobs always repartition from the current estimates.
+        to_repart: List[_Job] = []
+        to_measure: List[_Job] = []
+        for job in jobs:
+            if job.status == "new":
+                if job.spec.warm_start_d is not None:
+                    job.pending_d = [int(v) for v in job.spec.warm_start_d]
+                    to_measure.append(job)
+                elif not bool(job.empty_rows.any()):
+                    # every model has >= 1 point (the empty_rows mirror is
+                    # eagerly maintained, so deferred obs count): warm start
+                    to_repart.append(job)
+                else:
+                    job.pending_d = _even(job.spec.n, self.p)
+                    to_measure.append(job)
+            elif job.status == "running":
+                to_repart.append(job)
+
+        # Phase 2: ONE stacked repartition for every job that needs one,
+        # then the host-side seen-set / probe-escape logic per job.
+        if to_repart:
+            new_ds = self._repartition(to_repart)
+            for job, d_new in zip(to_repart, new_ds):
+                if job.status == "running":
+                    key = tuple(d_new)
+                    if key in job.seen:
+                        t_seen = job.seen[key]
+                        imb_seen = imbalance(t_seen)
+                        if imb_seen < job.best_imb:
+                            job.best_d, job.best_t, job.best_imb = (
+                                list(d_new), list(t_seen), imb_seen,
+                            )
+                        probe = (
+                            _probe_neighbour(
+                                d_new, t_seen, job.seen, job.spec.caps,
+                                int(job.spec.min_units),
+                            )
+                            if job.probes_left > 0
+                            else None
+                        )
+                        if probe is None:
+                            self._finish(
+                                job, job.best_d, job.best_t,
+                                job.best_imb <= job.spec.eps, job.best_imb,
+                            )
+                            finished[job.spec.name] = job.result
+                            continue
+                        job.probes_left -= 1
+                        d_new = probe
+                job.pending_d = [int(v) for v in d_new]
+                to_measure.append(job)
+
+        # Phase 3: ONE batched measurement for every measuring job
+        # (addressed by name — the stable identity across restacks).
+        if to_measure:
+            names = [job.spec.name for job in to_measure]
+            D = np.asarray([job.pending_d for job in to_measure], dtype=np.int64)
+            T = np.asarray(executor.run_jobs(names, D), dtype=np.float64)
+            alpha = self._alpha if self._alpha is not None else getattr(executor, "alpha", 0.0)
+            beta = self._beta if self._beta is not None else getattr(executor, "beta", 0.0)
+
+            # Phase 4: ONE stacked fold-in (device carry first — it restacks
+            # from the PRE-fold host models if dirty — then the host
+            # mirrors), and the per-job convergence settle of autotune.
+            self._fold(to_measure, D.astype(np.float64), T)
+            for k, job in enumerate(to_measure):
+                d = job.pending_d
+                times = [float(v) for v in T[k]]
+                job.pending_obs.append((list(d), times))
+                job.invalidate()
+                job.history.append((list(d), list(times)))
+                job.seen[tuple(d)] = list(times)
+                job.d, job.times = list(d), times
+                job.pending_d = None
+                job.it += 1
+                job.status = "running"
+                job.bench_cost += max(times) + alpha + beta * self.p
+                imb = imbalance(times)
+                if imb < job.best_imb:
+                    job.best_d, job.best_t, job.best_imb = list(d), list(times), imb
+                if imb <= job.spec.eps:
+                    self._finish(job, d, times, True, imb)
+                    finished[job.spec.name] = job.result
+                elif job.it >= job.spec.max_iter:
+                    self._finish(job, job.best_d, job.best_t, False, job.best_imb)
+                    finished[job.spec.name] = job.result
+
+        self.rounds += 1
+        return finished
+
+    def rebalance(
+        self, loads: Optional[Dict[str, Optional[int]]] = None
+    ) -> Dict[str, List[int]]:
+        """The serving fast path: recompute every (or the given) tenants'
+        distributions from the CURRENT estimates in one stacked device
+        program — no measurement, no fold-in.  ``loads`` optionally updates
+        unit counts first (tenant traffic drifted); a changed ``n`` clears
+        that job's fixed-point ``seen`` set (distributions of different
+        totals are never comparable), and a job whose distribution actually
+        moves drops its cached autotune ``result`` — ``snapshot`` then
+        reports the live distribution instead of a stale Partition.  Once the fleet's partial estimates
+        are accurate enough — the paper's stopping point — this is the only
+        per-round work a serving fleet does, and it stays ONE program per
+        round however many tenants are admitted."""
+        if loads:
+            for name, n in loads.items():
+                job = self._jobs[name]
+                if n is None or int(n) == job.spec.n:
+                    continue
+                n = int(n)
+                if n < self.p:
+                    raise ValueError(f"DFPA requires n >= p (n={n}, p={self.p})")
+                job.icaps = np.asarray(
+                    _prep_unit_caps(self.p, n, job.spec.caps, int(job.spec.min_units)),
+                    dtype=np.int64,
+                )
+                # a fresh spec, never a mutation — the caller still owns the
+                # JobSpec it admitted (same convention as resize())
+                job.spec = replace(job.spec, n=n)
+                job.seen = {}
+        targets = [
+            self._jobs[nm] for nm in (loads if loads is not None else self._jobs)
+        ]
+        if not targets:
+            return {}
+        ds = self._repartition(targets)
+        out = {}
+        for job, d in zip(targets, ds):
+            d = list(d)
+            if d != job.d:
+                # the cached autotune result no longer describes what the
+                # fleet is serving; snapshot() falls back to the live view
+                # (times measured for the OLD distribution are dropped too)
+                job.result = None
+                job.times = []
+            job.d = d
+            out[job.spec.name] = list(d)
+        self.rounds += 1
+        return out
+
+    def run(self, executor, *, max_rounds: Optional[int] = None) -> Dict[str, Partition]:
+        """Drive rounds until every admitted job finishes (each is bounded
+        by its own ``max_iter``); returns name -> Partition."""
+        r = 0
+        while any(j.status != "done" for j in self._jobs.values()):
+            if max_rounds is not None and r >= max_rounds:
+                break
+            self.step(executor)
+            r += 1
+        return {
+            name: job.result
+            for name, job in self._jobs.items()
+            if job.result is not None
+        }
+
+    # -- profiles -------------------------------------------------------------
+
+    def save_profiles(self, registry: Optional[ProfileRegistry] = None) -> None:
+        """Fold every current job's learned estimates into the registry
+        (without retiring anyone) — the periodic checkpoint a serving fleet
+        takes so the next session warm-starts."""
+        reg = registry if registry is not None else self.registry
+        if reg is None or self.device_classes is None:
+            raise ValueError("no registry / device_classes to save profiles into")
+        for job in self._jobs.values():
+            job.flush()
+            reg.record_job(self.device_classes, job.spec.workload, job.models)
+
+    # -- internals ------------------------------------------------------------
+
+    def _finish(self, job: _Job, d, t, converged: bool, imb: float) -> None:
+        job.flush()  # diagnostics["models"] surfaces the live estimates
+        job.status = "done"
+        job.result = Partition(
+            allocations=[int(v) for v in d],
+            t_star=None,
+            makespan=max(t) if t else None,
+            imbalance=imb,
+            converged=converged,
+            iterations=job.it,
+            policy=Policy.DFPA,
+            backend=self._backend,
+            times=[float(v) for v in t],
+            diagnostics={
+                "history": job.history,
+                "models": job.models,
+                "probes_used": job.probe_budget - job.probes_left,
+                "bench_cost": job.bench_cost,
+            },
+        )
+
+    def _assign_lanes(self):
+        """(Re)build the lane order; on the jax backend also restack the
+        device carry from the per-job host models (the lazy restack that
+        admit/retire/resize scheduled)."""
+        names = list(self._jobs)
+        for lane, nm in enumerate(names):
+            self._jobs[nm].lane = lane
+        self._stack_names = names
+        if self._backend == "jax" and names:
+            from ..core.modelbank_jax import JaxModelBank
+
+            self._stacked = JaxModelBank.stack(
+                [
+                    JaxModelBank.from_bank(self._jobs[nm].bank(), dtype=self.dtype)
+                    for nm in names
+                ]
+            )
+            self.restacks += 1
+        self._stack_dirty = False
+        return self._stacked
+
+    def _ensure_stack(self):
+        if self._stack_dirty or self._stacked is None:
+            self._assign_lanes()
+        return self._stacked
+
+    def _repartition(self, jobs: List[_Job]) -> List[List[int]]:
+        """One distribution per job from the current estimates — a single
+        stacked device program on the jax backend, per-job host banks on
+        numpy.  Identical per-lane math to q independent
+        ``SpeedStore.partition_units`` calls."""
+        for job in jobs:
+            # cheap incremental mirror of the store's empty-FPM feasibility
+            # check, with the job named (the batched call couldn't say who)
+            if bool(np.any((job.icaps > 0) & job.empty_rows)):
+                raise ValueError(f"job {job.spec.name!r}: empty FPM")
+        if self._backend == "scalar":
+            # The seed per-model loop (always the exact completion — the
+            # session-knob demotion semantics of Scheduler._completion_for).
+            out = []
+            for job in jobs:
+                job.flush()
+                d, _ = _partition_units_scalar(
+                    job.models, job.spec.n, [int(c) for c in job.icaps],
+                    min_units=int(job.spec.min_units),
+                )
+                out.append([int(v) for v in d])
+            return out
+        if self._backend != "jax":
+            out = []
+            for job in jobs:
+                d, _ = _partition_units_bank(
+                    job.bank(), job.spec.n, [int(c) for c in job.icaps],
+                    min_units=int(job.spec.min_units),
+                    completion=job.spec.completion,
+                )
+                out.append([int(v) for v in d])
+            return out
+        stacked = self._ensure_stack()
+        q = len(self._stack_names)
+        n_arr = np.zeros(q, dtype=np.int64)
+        mu_arr = np.zeros(q, dtype=np.int64)
+        caps_arr = np.zeros((q, self.p), dtype=np.int64)
+        # Per-lane completion routing, resolved like q independent stores
+        # would: "auto" lanes from the stacked bank's device-side
+        # monotone_lanes() (ONE jitted reduction per fold cycle — the same
+        # lazy resolution a single carry pays — and skipped entirely when
+        # every job forces a mode), forced modes override.
+        lanes_auto = (
+            stacked.monotone_lanes()
+            if any(job.spec.completion == "auto" for job in jobs)
+            else None
+        )
+        lanes_mask = np.zeros(q, dtype=bool)
+        for job in jobs:
+            n_arr[job.lane] = job.spec.n
+            mu_arr[job.lane] = int(job.spec.min_units)
+            caps_arr[job.lane] = job.icaps
+            c = job.spec.completion
+            lanes_mask[job.lane] = (
+                True if c == "threshold"
+                else False if c == "greedy"
+                else bool(lanes_auto[job.lane])
+            )
+        d = stacked.partition_units(
+            n_arr, caps_arr, min_units=mu_arr, completion_lanes=lanes_mask
+        )
+        self.device_dispatches += 1
+        return [[int(v) for v in d[job.lane]] for job in jobs]
+
+    def _fold(self, measured: List[_Job], D: np.ndarray, T: np.ndarray) -> None:
+        """One stacked fold-in of this round's observations (jax backend;
+        rows of non-measuring lanes masked invalid).  The host mirrors are
+        updated by the caller AFTER this, so a dirty stack rebuilt here
+        never double-counts the round."""
+        ok = (D > 0) & (T > 0)
+        for k, job in enumerate(measured):
+            job.empty_rows = job.empty_rows & ~ok[k]
+        if self._backend != "jax":
+            return
+        stacked = self._ensure_stack()
+        q = len(self._stack_names)
+        lanes = [job.lane for job in measured]
+        x = np.zeros((q, self.p), dtype=np.float64)
+        s = np.ones((q, self.p), dtype=np.float64)
+        valid = np.zeros((q, self.p), dtype=bool)
+        x[lanes] = D
+        s[lanes] = np.where(ok, D / np.where(T > 0, T, 1.0), 1.0)
+        valid[lanes] = ok
+        self._stacked = stacked.fold_in(x, s, valid)
+        self.device_dispatches += 1

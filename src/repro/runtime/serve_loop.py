@@ -69,6 +69,15 @@ class ReplicaDispatcher:
     dispatcher is an ``Executor``; :meth:`balance` drives it through the
     ``Scheduler`` facade and leaves the warm session on ``self.scheduler``
     for the online lifecycle (``observe`` / ``join`` / ``leave``).
+
+    Fleet mode (multi-tenant serving): :meth:`balance_fleet` admits one job
+    per tenant request stream into a ``FleetScheduler`` — one stacked device
+    bank, one partition + one fold-in program per round for ALL tenants —
+    and leaves the warm fleet session on ``self.fleet`` for the online
+    lifecycle (``admit`` / ``retire`` / ``resize`` / further ``step`` s).
+    With a ``ProfileRegistry`` (plus ``device_classes``) and per-tenant
+    ``workload`` tags, tenants warm-start from profiles saved by earlier
+    sessions instead of paying cold CPM probes.
     """
 
     replica_run: Callable[[int, int], float]
@@ -76,6 +85,7 @@ class ReplicaDispatcher:
     eps: float = 0.1
     logs: List[RoundLog] = field(default_factory=list)
     scheduler: Optional[Scheduler] = None
+    fleet: object = None  # warm FleetScheduler session (balance_fleet)
 
     @property
     def num_procs(self) -> int:
@@ -88,6 +98,19 @@ class ReplicaDispatcher:
         self.logs.append(RoundLog(list(map(int, d)), times, max(times)))
         return times
 
+    def run_jobs(self, names: Sequence[str], D):
+        """FleetExecutor protocol: one multi-tenant round — every measuring
+        tenant's chunks on every replica (time-sliced per replica, so each
+        (tenant, replica) cell is an independent ``replica_run`` call)."""
+        import numpy as np
+
+        out = []
+        for k, _name in enumerate(names):
+            d = [int(v) for v in D[k]]
+            times = self.run(d)
+            out.append(times)
+        return np.asarray(out, dtype=np.float64)
+
     def round_cost(self, times: Sequence[float]) -> float:
         return max(times)
 
@@ -97,3 +120,40 @@ class ReplicaDispatcher:
         if self.scheduler is None:
             self.scheduler = Scheduler(policy=Policy.DFPA, eps=self.eps)
         return self.scheduler.autotune(self, n_chunks, self.eps, **kw)
+
+    def balance_fleet(
+        self,
+        tenants: Dict[str, int],
+        *,
+        backend: str = "jax",
+        registry=None,
+        device_classes: Optional[Sequence[str]] = None,
+        workloads: Optional[Dict[str, str]] = None,
+        **kw,
+    ) -> Dict[str, Partition]:
+        """Balance every tenant's chunk stream concurrently: ``tenants``
+        maps tenant name -> its chunk count ``n``; returns tenant ->
+        ``Partition``.  One ``FleetScheduler`` round serves all tenants
+        (see the class docstring); extra ``kw`` become per-job ``JobSpec``
+        fields (``min_units``, ``max_iter``, ...)."""
+        from ..fleet import FleetScheduler, JobSpec
+
+        self.fleet = FleetScheduler(
+            self.num_replicas,
+            backend=backend,
+            registry=registry,
+            device_classes=device_classes,
+            alpha=0.0,
+            beta=0.0,
+        )
+        for name, n in tenants.items():
+            self.fleet.admit(
+                JobSpec(
+                    name=name,
+                    n=int(n),
+                    eps=self.eps,
+                    workload=(workloads or {}).get(name),
+                    **kw,
+                )
+            )
+        return self.fleet.run(self)
