@@ -50,6 +50,7 @@ are deprecation shims that delegate to it.
 """
 
 from .dfpa import DFPAResult, dfpa
+from .hierarchy import Hierarchy
 from .scheduler import Partition, Policy, Scheduler
 from .speedstore import SpeedStore, sample_analytic_points
 from .executor import (
@@ -62,7 +63,7 @@ from .executor import (
     SimulatedExecutor,
 )
 from .fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, SpeedModel, imbalance
-from .modelbank import ModelBank
+from .modelbank import ModelBank, aggregate_groups, group_members
 from .partition import cpm_partition, partition_continuous, partition_units
 from .partition2d import (
     Grid2DResult,
@@ -113,6 +114,7 @@ __all__ = [
     "Executor",
     "Grid2DResult",
     "HCL_SPECS",
+    "Hierarchy",
     "JaxModelBank",
     "ModelBank",
     "NodeSpec",
@@ -125,6 +127,8 @@ __all__ = [
     "SpeedModel",
     "SpeedStore",
     "sample_analytic_points",
+    "aggregate_groups",
+    "group_members",
     "app_time_2d",
     "bank_repartition_2d",
     "cpm_partition",

@@ -66,6 +66,29 @@ positive caps), and all three produce allocations that sum exactly to ``n``
 with identical makespans (tie-breaks may place a leftover unit differently
 only between the scalar and banked continuous solvers' float paths).
 
+**The two-level (hierarchical) path** composes the same three backends one
+level up.  Given a ``groups[p]`` assignment, :func:`aggregate_groups` builds
+one *group-level* speed function per group — the pointwise
+sum-of-speeds-at-equal-time composition ``X_G(t) = sum_{i in G}
+alloc_i(t, cap_i)``, sampled at the union of the members' knot times (plus
+their cap-crossing times), so the aggregate is exact at every sampled knot
+and piecewise-interpolated between them.  The aggregate is monotone-time BY
+CONSTRUCTION (its knots are sampled at sorted times, so the segment
+inequality ``x0 s1 <= x1 s0`` reduces to ``t0 <= t1``), which means the
+threshold-count completion is always exact at the group level regardless of
+the members' shapes.  ``core/hierarchy.py`` then solves the outer ``t*``
+bisection over the ``[g, k_g]`` group bank — O(g k_g) instead of O(p k) —
+and scatters each group's integer share to an inner per-group partition on
+the group's own ``[p_g, k]`` sub-bank: per-group host solves on numpy,
+one ``lax.map`` program over cache-resident ``[g, p_max, k]`` blocks on
+jax (``_hier_inner_jit``), and the same body ``shard_map``'d across devices
+under ``sharding="shard_map"`` so no device touches more than its
+``ceil(g/ndev)`` blocks.  One group reproduces the flat path bit-identically
+(the outer trivially assigns it all ``n`` units and the inner IS the flat
+kernel); multiple groups agree with the flat makespan to within the
+interpolation error of the aggregate (fuzz-locked in
+``tests/test_hierarchy.py``).
+
 The fleet layer stacks the jax backend one level higher: q concurrent
 jobs' banks live in ONE ``[q, p, k]`` ``JaxModelBank`` owned by
 ``repro.fleet.FleetScheduler`` (per-job ``n``/caps/``min_units`` and
@@ -174,7 +197,7 @@ import numpy as np
 
 from .fpm import ConstantModel, PiecewiseLinearFPM
 
-__all__ = ["ModelBank"]
+__all__ = ["ModelBank", "aggregate_groups", "group_members"]
 
 ArrayLike = Union[float, Sequence[float], np.ndarray]
 
@@ -427,3 +450,209 @@ class ModelBank:
 
     def to_models(self) -> List[PiecewiseLinearFPM]:
         return [self.row(i) for i in range(self.p)]
+
+
+# ---------------------------------------------------------------------------
+# Group aggregation — the two-level partitioning path (core/hierarchy.py)
+# ---------------------------------------------------------------------------
+
+
+def _alloc_at_times(bank: ModelBank, ts: np.ndarray, caps: np.ndarray) -> np.ndarray:
+    """``alloc_at_time`` for a whole VECTOR of candidate times at once:
+    returns ``[T, p]``.  Expression-for-expression the scalar
+    :meth:`ModelBank.alloc_at_time` with a leading time axis (same shape
+    discipline as the jax ``_alloc_at_time``'s batched ``t``), so each row
+    is bitwise what the scalar call would produce — the group aggregation
+    samples K knots in three numpy passes instead of K."""
+    ts = np.asarray(ts, dtype=np.float64)[:, None]  # [T, 1]
+    caps2 = np.broadcast_to(np.asarray(caps, dtype=np.float64), (bank.p,))[None, :]
+    first_x, first_s, last_x, last_s = bank._edges()
+
+    best = np.minimum(ts * first_s[None, :], np.minimum(first_x[None, :], caps2))
+
+    k_max = bank.xs.shape[1]
+    if k_max >= 2:
+        x0, x1 = bank.xs[None, :, :-1], bank.xs[None, :, 1:]
+        s0, s1 = bank.ss[None, :, :-1], bank.ss[None, :, 1:]
+        seg = np.arange(k_max - 1)[None, None, :]
+        valid = (
+            (seg < (bank.counts - 1)[None, :, None])
+            & (x0 < caps2[..., None])
+            & (x1 > x0)
+        )
+        x1c = np.minimum(x1, caps2[..., None])
+        denom = np.where(x1 > x0, x1 - x0, 1.0)
+        m = (s1 - s0) / denom
+        tseg = ts[..., None]  # [T, 1, 1]
+        a = 1.0 - tseg * m
+        b = tseg * (s0 - m * x0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            ub = b / np.where(a != 0.0, a, 1.0)
+        cand = np.where(
+            a > 0.0,
+            np.where(ub >= x0, np.minimum(ub, x1c), 0.0),
+            np.where(
+                a == 0.0,
+                np.where(b >= 0.0, x1c, 0.0),
+                np.where(x1c >= ub, x1c, 0.0),
+            ),
+        )
+        cand = np.where(valid, cand, 0.0)
+        best = np.maximum(best, cand.max(axis=-1))
+
+    ub_r = ts * last_s[None, :]
+    right = (caps2 > last_x[None, :]) & (ub_r >= last_x[None, :]) & (bank.counts > 0)[None, :]
+    best = np.maximum(best, np.where(right, np.minimum(ub_r, caps2), 0.0))
+
+    best = np.where((caps2 > 0.0) & (bank.counts > 0)[None, :], best, 0.0)
+    return np.where(ts > 0.0, best, 0.0)
+
+
+def group_members(groups: Sequence[int]) -> Tuple[List[int], List[np.ndarray]]:
+    """Normalize a ``groups[p]`` assignment: returns the sorted unique group
+    ids and, per group, the member processor indices in ascending order (the
+    order the hierarchical scatter preserves)."""
+    garr = np.asarray(groups)
+    if garr.ndim != 1:
+        raise ValueError("groups must be a 1-D per-processor assignment")
+    gids = sorted(set(int(v) for v in garr))
+    members = [np.flatnonzero(garr == g) for g in gids]
+    return gids, members
+
+
+def _aggregate_one(
+    sub: ModelBank, caps: np.ndarray, max_knots: int
+) -> Tuple[List[float], List[float]]:
+    """One group's aggregate knots.
+
+    The aggregate problem-size-at-time function is ``X(t) = sum_i
+    alloc_i(t, cap_i)`` — exactly what one bisection step of the outer
+    partitioner needs.  Knots are sampled at the union of the members'
+    observed knot times ``x_ij / s_ij`` plus each member's cap-crossing time
+    ``time_i(cap_i)`` (where its alloc saturates), so the aggregate is exact
+    at every time any member's behaviour changes slope; between knots the
+    bank's linear-in-speed interpolation approximates the true piecewise-
+    rational composition.  Member caps are baked in (NOT the job size ``n``:
+    the same aggregate serves any ``n``, and allocations above ``n`` cannot
+    occur at the solution).  Sampling at sorted times makes the result
+    monotone-time by construction: ``x0 s1 <= x1 s0`` with ``s = x/t``
+    reduces to ``t0 <= t1``.
+
+    Two refinements keep the interpolation honest between knot times:
+
+    * a member's alloc can JUMP at a knot time — within a segment the
+      implied time ``x / s(x)`` is a monotone hyperbola piece (``s``
+      linear), so when it runs *decreasing* the whole segment becomes
+      feasible the moment ``t`` reaches the far knot's time: a step, never
+      an interior extremum.  A sample exactly at the knot time lands on TOP
+      of that step; sampling each kept time again just below
+      (``t (1 - 1e-9)``) pins the step's bottom, so the aggregate brackets
+      the jump instead of interpolating across it;
+    * between WIDELY separated knot times the sum of hyperbola/linear
+      member pieces bends far from the bank's linear-in-speed
+      interpolation, so a geometric fill of sample times spans the whole
+      knot range — the gap ratio is bounded regardless of how the members'
+      knots cluster.
+
+    The knot budget splits ``max_knots`` as: up to 1/4 exact knot times,
+    1/4 geometric fill, then the below-jump brackets double the kept set.
+    """
+    ts = _aggregate_times(sub, caps, max_knots)
+    if ts.size == 0:
+        return [], []
+    caps_f = caps.astype(np.float64)
+    k = sub.xs.shape[1]
+    # _alloc_at_times materializes ~a dozen [T_chunk, p, k-1] temporaries;
+    # chunk the time axis so each slab stays ~1 MB and the whole working set
+    # L2-resident — the pass is memory-bandwidth bound, and cache blocking
+    # here measures ~1.8x at fleet group shapes (p_g=1000, k~17) while also
+    # keeping p ~ 10^5 member groups allocatable at p=10^6.  Chunk
+    # boundaries cannot change any element's arithmetic, so the result is
+    # bitwise independent of the chunk size.
+    t_chunk = max(1, int(131_072 // max(sub.p * max(k, 1), 1)))
+    xs_g = np.concatenate(
+        [
+            _alloc_at_times(sub, ts[i : i + t_chunk], caps_f).sum(axis=1)
+            for i in range(0, ts.size, t_chunk)
+        ]
+    )
+    return _points_from_samples(ts, xs_g)
+
+
+def _aggregate_times(sub: ModelBank, caps: np.ndarray, max_knots: int) -> np.ndarray:
+    """Sample times for one group's aggregate (see :func:`_aggregate_one`).
+
+    Factored out of :func:`_aggregate_one` so the jax hierarchy backend can
+    compute the sample grid on host (cheap, O(p k) with small constants)
+    while evaluating the member allocations at those times on device.
+    Returns a sorted, strictly positive, possibly empty float array.
+    """
+    k = sub.xs.shape[1]
+    valid = (np.arange(k)[None, :] < sub.counts[:, None]) & (caps[:, None] > 0)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_pts = np.where(sub.ss > 0, sub.xs / sub.ss, np.nan)
+    ts = t_pts[valid]
+    active = (caps > 0) & (sub.counts > 0)
+    if np.any(active):
+        cap_t = sub.time(np.where(active, caps, 1.0))
+        ts = np.concatenate([ts, cap_t[active]])
+    ts = np.unique(ts[np.isfinite(ts) & (ts > 0)])
+    if ts.size == 0:
+        return ts
+    quota = max(max_knots // 4, 2)
+    if ts.size > quota:
+        pick = np.unique(np.round(np.linspace(0, ts.size - 1, quota)).astype(int))
+        ts = ts[pick]
+    # Jump brackets FIRST, on the knot/cap-derived times only: member alloc
+    # functions can step exactly AT a knot time, never between knots, so the
+    # geometric fill below (curvature sampling in wide gaps) needs no
+    # brackets — skipping them keeps the sampled grid (and the group bank's
+    # knot count) ~25% smaller for the same accuracy.
+    ts = np.unique(np.concatenate([ts, ts * (1.0 - 1e-9)]))
+    if ts[-1] > ts[0]:
+        ts = np.unique(np.concatenate([ts, np.geomspace(ts[0], ts[-1], quota)]))
+    return ts
+
+
+def _points_from_samples(
+    ts: np.ndarray, xs_g: np.ndarray
+) -> Tuple[List[float], List[float]]:
+    """Turn sampled ``(time, aggregate size)`` pairs into bank knot lists."""
+    keep = xs_g > 0
+    # equal-X plateaus (all members capped): keep the FIRST (earliest-time,
+    # fastest) occurrence — the true aggregate reaches that size then.
+    keep &= np.concatenate([[True], np.diff(xs_g) > 0])
+    ts, xs_g = ts[keep], xs_g[keep]
+    return list(xs_g), list(xs_g / ts)
+
+
+def aggregate_groups(
+    bank: ModelBank,
+    groups: Sequence[int],
+    caps: Sequence[float],
+    *,
+    max_group_knots: int = 64,
+) -> Tuple[ModelBank, np.ndarray, List[np.ndarray]]:
+    """Build the ``[g, k_g]`` group-level bank for a ``groups[p]`` assignment.
+
+    Returns ``(group_bank, group_caps, members)``: one aggregate row per
+    group (see :func:`_aggregate_one`; ``max_group_knots`` bounds each row's
+    knot count, keeping the outer solve O(g k_g)), the summed member caps,
+    and the per-group member indices.  The group bank's ``monotone`` flag is
+    set — true by construction — so the outer integer completion may always
+    take the threshold-count bulk grant.  Groups with no capacity get an
+    empty row and cap 0 (the outer solver allocates them nothing).
+    """
+    caps_arr = np.broadcast_to(np.asarray(caps, dtype=np.float64), (bank.p,))
+    gids, members = group_members(groups)
+    pts: List[Tuple[List[float], List[float]]] = []
+    gcaps = np.zeros(len(gids), dtype=np.float64)
+    for gi, idx in enumerate(members):
+        sub = ModelBank(
+            xs=bank.xs[idx], ss=bank.ss[idx], counts=bank.counts[idx]
+        )
+        gcaps[gi] = caps_arr[idx].sum()
+        pts.append(_aggregate_one(sub, caps_arr[idx], max_group_knots))
+    gbank = ModelBank.from_point_lists(pts)
+    gbank.monotone = True  # by construction: knots sampled at sorted times
+    return gbank, gcaps, members

@@ -60,7 +60,23 @@ from jax import lax
 
 from .modelbank import ModelBank
 
-__all__ = ["JaxModelBank"]
+__all__ = ["JaxModelBank", "enable_compilation_cache"]
+
+
+def enable_compilation_cache(path: str) -> None:
+    """Point jax's persistent compilation cache at ``path`` so a restarted
+    session (or a cold CI runner) reuses compiled partition/fold kernels
+    instead of re-tracing them — the Scheduler/FleetScheduler
+    ``compilation_cache_dir=`` knob.  Idempotent; safe to call per session."""
+    from jax.experimental.compilation_cache import compilation_cache as cc
+
+    cc.set_cache_dir(str(path))
+    try:
+        # Our kernels compile in ~1-3s each; cache them all, not just the
+        # ones above jax's default write threshold.
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    except Exception:  # pragma: no cover - knob name varies across versions
+        pass
 
 # Buffer donation is a no-op (and warns) on CPU; donate the fold-in carry
 # only where the platform actually reuses the buffers.  When donation is on,
@@ -162,6 +178,87 @@ def _total_alloc(xs, ss, counts, t, caps):
 
 
 @jax.jit
+def _agg_products_jit(xs, ss, ts):
+    """Segment-slope products ``t*m`` and ``m*x0`` for the aggregation
+    kernel, compiled as a SEPARATE executable from ``_agg_alloc_jit`` on
+    purpose: within one executable LLVM contracts ``1 - t*m`` and
+    ``s0 - m*x0`` into FMAs (observed on XLA:CPU; ``optimization_barrier``
+    does not survive the LLVM lowering), which rounds differently from
+    numpy's two-op sequence and breaks the numpy/jax aggregate-bank
+    bit-parity.  Materializing the products as one executable's OUTPUTS
+    forces the standalone rounding — the consumer then only subtracts,
+    and contraction cannot cross compiled-executable boundaries."""
+    one = jnp.asarray(1.0, xs.dtype)
+    x0, x1 = xs[..., :-1], xs[..., 1:]
+    s0, s1 = ss[..., :-1], ss[..., 1:]
+    denom = jnp.where(x1 > x0, x1 - x0, one)
+    m = (s1 - s0) / denom
+    tm = ts[..., None, None] * m[:, None]  # [g, T, p, k-1]
+    mx0 = m * x0  # [g, p, k-1]
+    return tm, mx0
+
+
+@jax.jit
+def _agg_alloc_jit(xs, ss, counts, caps, ts, tm, mx0):
+    """Member allocations at per-group sample times — the device half of
+    group aggregation: ``[g, p, k]`` bank blocks evaluated at ``[g, T]``
+    times give ``[g, T, p]`` member allocs.  Open-codes ``_alloc_at_time``
+    with a broadcast time lane, taking the two FMA-contractable products
+    precomputed (see ``_agg_products_jit``), so every remaining op is a
+    single correctly-rounded IEEE op and the result is bitwise the host
+    ``_alloc_at_times`` pass.  The per-group member SUM happens back on
+    host to keep the reduction order — and the aggregate bank —
+    bit-identical to the numpy backend."""
+    dt = xs.dtype
+    zero, one = jnp.asarray(0.0, dt), jnp.asarray(1.0, dt)
+    xsb, ssb, cb, capb = xs[:, None], ss[:, None], counts[:, None], caps[:, None]
+    tb = jnp.asarray(ts, dt)[..., None]  # [g, T, 1] against [g, 1, p]
+    first_x, first_s, last_x, last_s = _edges(xsb, ssb, cb)
+
+    best = jnp.minimum(tb * first_s, jnp.minimum(first_x, capb))
+
+    k_max = xs.shape[-1]
+    if k_max >= 2:
+        x0, x1 = xsb[..., :-1], xsb[..., 1:]
+        s0 = ssb[..., :-1]
+        seg = jnp.arange(k_max - 1)
+        valid = (
+            (seg < (cb - 1)[..., None])
+            & (x0 < capb[..., None])
+            & (x1 > x0)
+        )
+        x1c = jnp.minimum(x1, capb[..., None])
+        tseg = tb[..., None]  # [g, T, 1, 1] against [g, 1, p, k-1]
+        a = one - tm
+        b = tseg * (s0 - mx0[:, None])
+        ub = b / jnp.where(a != zero, a, one)
+        cand = jnp.where(
+            a > zero,
+            jnp.where(ub >= x0, jnp.minimum(ub, x1c), zero),
+            jnp.where(
+                a == zero,
+                jnp.where(b >= zero, x1c, zero),
+                jnp.where(x1c >= ub, x1c, zero),
+            ),
+        )
+        cand = jnp.where(valid, cand, zero)
+        best = jnp.maximum(best, cand.max(axis=-1))
+
+    ub_r = tb * last_s
+    right = (capb > last_x) & (ub_r >= last_x) & (cb > 0)
+    best = jnp.maximum(best, jnp.where(right, jnp.minimum(ub_r, capb), zero))
+
+    best = jnp.where((capb > zero) & (cb > 0), best, zero)
+    return jnp.where(tb > zero, best, zero)
+
+
+def _agg_alloc(xs, ss, counts, caps, ts):
+    """Two-dispatch device aggregation evaluation (see the two jits)."""
+    tm, mx0 = _agg_products_jit(xs, ss, ts)
+    return _agg_alloc_jit(xs, ss, counts, caps, ts, tm, mx0)
+
+
+@jax.jit
 def _monotone_lanes_jit(xs, ss, counts):
     """Device mirror of ``modelbank._monotone_check`` (same expressions),
     reduced per *lane*: one bool per leading batch element (a scalar for a
@@ -222,8 +319,14 @@ def _partition_continuous_jit(xs, ss, counts, caps, n, rel_tol, max_steps):
     # provable no-ops, and rel_tol=1e-12 converges in ~45 steps — running
     # all 200 made the p=10^4..10^5 (and stacked [q, p, k]) partitions
     # ~4x more expensive for bit-identical results.
+    # Lanes with n <= 0 start done: their convergence test (hi - lo <=
+    # rel_tol * hi with lo pinned at 0) could never fire, so without this
+    # they would spin all max_steps for an answer the excess rescale below
+    # zeroes out regardless.  Allocations are identical either way; only
+    # such lanes' (unused) t_star differs.  The hierarchical inner solve
+    # batches empty-share/padded group lanes through here.
     lo = jnp.zeros_like(hi)
-    done = jnp.zeros(hi.shape, dtype=bool)
+    done = jnp.broadcast_to(n <= zero, hi.shape)
 
     def bis_cond(carry):
         _, _, done, i = carry
@@ -376,21 +479,26 @@ def _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover):
     return d, ok
 
 
-@partial(jax.jit, static_argnames=("max_steps", "completion_fast"))
-def _partition_units_jit(
+def _partition_units_impl(
     xs, ss, counts, caps_i, n, min_units, rel_tol, max_steps, fast_mask,
     completion_fast=False,
 ):
-    # `n`, `min_units` and `fast_mask` carry the batch shape (scalars for a
-    # plain bank, [q] for a stacked one) — per-column unit counts, floors and
-    # completion routing all ride the same device program.
+    # `n` and `fast_mask` carry the batch shape (scalars for a plain bank,
+    # [q] for a stacked one); `min_units` carries the ROW shape ``[..., p]``
+    # (the public API broadcasts its per-lane floors; the hierarchical inner
+    # solve passes genuinely per-row floors so padded member rows pin at 0)
+    # — per-column unit counts, floors and completion routing all ride the
+    # same device program.  This plain impl is also called per group block
+    # inside ``_hier_inner_map``'s ``lax.map`` (and under ``shard_map``), so
+    # it must stay jit-free; ``_partition_units_jit`` below is the jitted
+    # entry point with identical semantics.
     dt = xs.dtype
     it = caps_i.dtype
     n_f = jnp.asarray(n, dt)
     caps_f = jnp.minimum(caps_i.astype(dt), n_f[..., None])  # continuous clip
     alloc, t_star = _partition_continuous_jit(xs, ss, counts, caps_f, n_f, rel_tol, max_steps)
 
-    d = jnp.maximum(min_units[..., None], jnp.floor(alloc).astype(it))
+    d = jnp.maximum(min_units, jnp.floor(alloc).astype(it))
     d = jnp.minimum(d, caps_i)
     leftover = jnp.asarray(n, it) - d.sum(axis=-1)
     p = xs.shape[-2]
@@ -409,7 +517,8 @@ def _partition_units_jit(
         d, leftover, kk = carry
         i = jnp.take_along_axis(order, (kk % p)[..., None], axis=-1)[..., 0]
         d_i = jnp.take_along_axis(d, i[..., None], axis=-1)[..., 0]
-        take = (leftover < 0) & (d_i > min_units)
+        mu_i = jnp.take_along_axis(min_units, i[..., None], axis=-1)[..., 0]
+        take = (leftover < 0) & (d_i > mu_i)
         d = d - ((idx == i[..., None]) & take[..., None]).astype(it)
         return d, leftover + take.astype(it), kk + 1
 
@@ -447,6 +556,61 @@ def _partition_units_jit(
     else:
         d, ok = _complete_greedy_one(xs, ss, counts, caps_i, d, rem, leftover)
     return d, ok, t_star
+
+
+_partition_units_jit = partial(
+    jax.jit, static_argnames=("max_steps", "completion_fast")
+)(_partition_units_impl)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical inner solves: one device program over [g, p_max, k] group
+# blocks, with SIZE-ROUTED execution.  When the whole block set fits in
+# cache the groups run BATCHED (one [g, ...] bisection — every loop update
+# is already masked per lane, so results are bit-identical to solo runs);
+# when it does not, lax.map runs the groups SEQUENTIALLY so each group's
+# [p_g, k] block stays cache-resident through its whole t* bisection — the
+# cache-blocking that recovers the p >= 10^4 stacked regression.  Either
+# way the program compiles once and dispatches once.  Under shard_map the
+# same body runs per device over its local group lanes (no collectives:
+# every group's solve is independent), so no single device ever touches
+# more than its ceil(g/ndev) blocks of the bank.
+# ---------------------------------------------------------------------------
+
+
+def _hier_inner_map(
+    xs, ss, counts, caps_i, n, min_units, fast_mask, *,
+    rel_tol, max_steps, completion_fast, serial=True,
+):
+    """Per-group integer partitions: ``xs``/``ss`` are ``[g, p_max, k]``
+    (members right-padded with caps=0 / min_units=0 rows), ``n`` ``[g]`` the
+    outer solve's group shares, ``min_units`` ``[g, p_max]``, ``fast_mask``
+    ``[g]`` the per-group completion routing.  ``serial`` picks lax.map
+    (cache-blocked, for block sets larger than cache) over the batched
+    solve (one masked bisection, for cache-resident block sets) — the two
+    return BIT-IDENTICAL allocations, see the routing note above.  Returns
+    ``(d [g, p_max], ok [g], t_star [g])``."""
+    if not serial:
+        return _partition_units_impl(
+            xs, ss, counts, caps_i, n, min_units,
+            jnp.asarray(rel_tol, xs.dtype), max_steps, fast_mask,
+            completion_fast=completion_fast,
+        )
+
+    def body(args):
+        xs_g, ss_g, counts_g, caps_g, n_g, mu_g, fm_g = args
+        return _partition_units_impl(
+            xs_g, ss_g, counts_g, caps_g, n_g, mu_g,
+            jnp.asarray(rel_tol, xs_g.dtype), max_steps, fm_g,
+            completion_fast=completion_fast,
+        )
+
+    return lax.map(body, (xs, ss, counts, caps_i, n, min_units, fast_mask))
+
+
+_hier_inner_jit = partial(
+    jax.jit, static_argnames=("rel_tol", "max_steps", "completion_fast", "serial")
+)(_hier_inner_map)
 
 
 @partial(jax.jit, donate_argnums=_DONATE)
@@ -836,11 +1000,13 @@ class JaxModelBank:
                 f"< n={float(np.reshape(n_host, (-1,))[i])}"
             )
         self._check_feasible(caps_host.astype(np.float64), n)
+        # min_units broadcast to row shape [..., p]: the kernel takes per-row
+        # floors (uniform here; genuinely per-row on the hierarchical path).
         d, ok, t_star = _partition_units_jit(
             self.xs, self.ss, self.counts,
             jnp.asarray(caps_host, idtype),
             jnp.asarray(n_host),
-            jnp.asarray(mu_host, idtype),
+            jnp.asarray(np.broadcast_to(mu_host[..., None], shape), idtype),
             jnp.asarray(1e-12, self.dtype),
             max_steps,
             jnp.asarray(lanes_host),

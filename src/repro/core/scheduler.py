@@ -69,6 +69,7 @@ import numpy as np
 
 from .executor import BatchedSimulatedExecutor2D, Executor
 from .fpm import AnalyticModel, PiecewiseLinearFPM, imbalance
+from .hierarchy import Hierarchy
 from .modelbank import ModelBank
 from .partition2d import _col_times, _flat_imbalance, _rebalance_widths
 from .speedstore import SpeedStore
@@ -85,13 +86,18 @@ class Policy(Enum):
     * ``DFPA``   — the paper's algorithm: partial models built online from
       observations (``autotune`` / ``observe``);
     * ``GRID2D`` — the nested 2-D DFPA partitioner of §3.2 (requires
-      ``grid=``).
+      ``grid=``);
+    * ``HIER``   — the two-level path for hierarchically heterogeneous
+      platforms (requires ``groups=``): outer ``t*`` over per-group aggregate
+      models, inner per-group solves on the groups' own sub-banks
+      (``core/hierarchy.py``).
     """
 
     CPM = "cpm"
     FFMPA = "ffmpa"
     DFPA = "dfpa"
     GRID2D = "grid2d"
+    HIER = "hier"
 
 
 @dataclass
@@ -179,11 +185,19 @@ class Scheduler:
         detector: Optional[Any] = None,
         analytic_tol: Optional[float] = None,
         completion: str = "auto",
+        groups: Optional[Sequence[int]] = None,
+        sharding: Optional[str] = None,
+        max_group_knots: int = 64,
+        compilation_cache_dir: Optional[str] = None,
     ):
         if backend not in ("scalar", "numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         if completion not in ("auto", "threshold", "greedy"):
             raise ValueError(f"unknown completion mode {completion!r}")
+        if sharding not in (None, "shard_map"):
+            raise ValueError(f"unknown sharding mode {sharding!r}")
+        if policy is Policy.HIER and groups is None:
+            raise ValueError("policy=HIER requires a groups= assignment")
         # Integer-completion routing for every partition this session makes:
         # "auto" = threshold-count on monotone banks on the jitted backend
         # (the p=10^5 fast path), exact per-unit greedy otherwise — including
@@ -207,6 +221,20 @@ class Scheduler:
             store = SpeedStore.empty(int(num_groups), backend=backend)
         self.store = store
         self.detector = detector
+        # two-level routing: a groups= assignment sends every flat partition
+        # (partition/repartition/observe) through core/hierarchy.py —
+        # policy=HIER is the declarative spelling, but any policy may carry
+        # groups (e.g. a DFPA loop over a grouped platform).
+        self.groups = (
+            [int(v) for v in groups] if groups is not None else None
+        )
+        self.sharding = sharding
+        self.max_group_knots = int(max_group_knots)
+        self.compilation_cache_dir = compilation_cache_dir
+        if compilation_cache_dir is not None and backend == "jax":
+            from .modelbank_jax import enable_compilation_cache
+
+            enable_compilation_cache(compilation_cache_dir)
         # online state
         self.d: List[int] = (
             _even(self.n_units, self.num_groups)
@@ -271,6 +299,44 @@ class Scheduler:
             return "auto"
         return self.completion
 
+    # -- two-level routing (core/hierarchy.py) --------------------------------
+
+    def set_groups(self, groups: Optional[Sequence[int]]) -> None:
+        """Mid-flight group resize: replace (or, with ``None``, clear) the
+        two-level assignment; the next partition/observe/repartition routes
+        through the new grouping.  Host classes merging or a rack splitting
+        in two is a one-call regroup — the models are untouched."""
+        if groups is None:
+            if self.policy is Policy.HIER:
+                raise ValueError("policy=HIER requires a groups= assignment")
+            self.groups = None
+            return
+        if len(groups) != self.num_groups:
+            raise ValueError(
+                f"groups must be a length-p assignment "
+                f"(got {len(groups)} for p={self.num_groups})"
+            )
+        self.groups = [int(v) for v in groups]
+
+    def _hier_partition(self, n, caps, mu) -> Tuple[List[int], float]:
+        if self.backend == "scalar":
+            raise ValueError(
+                "hierarchical partitioning requires a banked store "
+                '(backend "numpy" or "jax")'
+            )
+        h = Hierarchy.from_bank(
+            self.store.bank(),
+            self.groups,
+            backend="jax" if self.backend == "jax" else "numpy",
+            sharding=self.sharding,
+            max_group_knots=self.max_group_knots,
+            dtype=self.dtype,
+        )
+        return h.partition_units(
+            n, caps, min_units=mu,
+            completion=self._completion_for(self.store), with_t=True,
+        )
+
     @property
     def imbalance_estimate(self) -> float:
         ts = [
@@ -308,9 +374,12 @@ class Scheduler:
         if caps is not None:
             self.caps = list(caps)
         mu = self.min_units if min_units is None else int(min_units)
-        d, t_star = self.store.partition(
-            n, self.caps, min_units=mu, completion=self._completion_for(self.store)
-        )
+        if self.groups is not None:
+            d, t_star = self._hier_partition(n, self.caps, mu)
+        else:
+            d, t_star = self.store.partition(
+                n, self.caps, min_units=mu, completion=self._completion_for(self.store)
+            )
         self.d = list(d)
         return self._flat_result(d, t_star, eps=self.eps if eps is None else eps)
 
@@ -372,10 +441,13 @@ class Scheduler:
         self.store.fold_in([float(di) for di in self.d], speeds, valid)
         if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
             return False
-        new_d = self.store.partition_units(
-            self.n_units, self.caps, min_units=self.min_units,
-            completion=self._completion_for(self.store),
-        )
+        if self.groups is not None:
+            new_d, _ = self._hier_partition(self.n_units, self.caps, self.min_units)
+        else:
+            new_d = self.store.partition_units(
+                self.n_units, self.caps, min_units=self.min_units,
+                completion=self._completion_for(self.store),
+            )
         if new_d == self.d:
             return False
         self.d = new_d
@@ -570,11 +642,12 @@ class Scheduler:
             PiecewiseLinearFPM.from_points(old_models[i].as_points()) for i in surviving
         ]
         donor = None
-        for m in models:
+        donor_pos = 0
+        for pos, m in enumerate(models):
             if m.num_points:
                 cand = max(m.as_points(), key=lambda pt: pt[1])
                 if donor is None or cand[1] > donor[1]:
-                    donor = cand
+                    donor, donor_pos = cand, pos
         for _ in range(joined):
             models.append(
                 PiecewiseLinearFPM.from_points([donor]) if donor else PiecewiseLinearFPM()
@@ -595,6 +668,15 @@ class Scheduler:
                     caps = None
                 else:
                     caps = [self.caps[i] for i in surviving] + [join_cap] * joined
+        groups = None
+        if self.groups is not None:
+            # survivors keep their group ids; joiners enter the donor
+            # survivor's group (the one whose estimate they borrow) so a
+            # hierarchical session stays hierarchical across membership
+            # changes.
+            groups = [self.groups[i] for i in surviving]
+            join_group = groups[donor_pos] if groups else 0
+            groups = groups + [join_group] * joined
         new = Scheduler(
             SpeedStore.from_models(models, backend=self.backend, dtype=self.dtype),
             policy=self.policy,
@@ -606,6 +688,9 @@ class Scheduler:
             backend=self.backend,
             detector=self.detector,
             completion=self.completion,
+            groups=groups,
+            sharding=self.sharding,
+            max_group_knots=self.max_group_knots,
         )
         if all(m.num_points for m in models) and new.n_units is not None:
             new.d = new.store.partition_units(
@@ -618,6 +703,7 @@ class Scheduler:
         self.store = other.store
         self.d = list(other.d)
         self.caps = other.caps
+        self.groups = list(other.groups) if other.groups is not None else None
         self._ema = {}  # group indices shifted; stale EMA keys are invalid
 
     def join(self, count: int = 1, *, caps=_UNSET) -> "Scheduler":
@@ -984,6 +1070,9 @@ class Scheduler:
             "smooth": self.smooth,
             "completion": self.completion,
             "caps": list(self.caps) if self.caps is not None else None,
+            "groups": list(self.groups) if self.groups is not None else None,
+            "sharding": self.sharding,
+            "max_group_knots": self.max_group_knots,
             "d": list(self.d),
             "points": store_state["points"],
             "dtype": store_state["dtype"],
@@ -1006,6 +1095,9 @@ class Scheduler:
             smooth=state.get("smooth", 0.5),
             backend=state.get("backend", "numpy"),
             completion=state.get("completion", "auto"),
+            groups=state.get("groups"),
+            sharding=state.get("sharding"),
+            max_group_knots=state.get("max_group_knots", 64),
         )
         cfg.update(overrides)
         backend = cfg.pop("backend")

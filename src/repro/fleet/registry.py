@@ -31,12 +31,35 @@ Failure policy
 A registry must never take a fleet down: a missing file, corrupt JSON, or a
 malformed entry degrades to a cold start with a ``UserWarning`` — the job
 just pays the measurement rounds it would have paid without a registry.
+
+Staleness and bounds
+--------------------
+
+Profiles age: a driver update or thermal re-limit changes a device class's
+speed function, and yesterday's points then *mislead* the warm start.  Two
+mechanisms keep the registry honest:
+
+* every entry carries an ``observed_at`` timestamp (refreshed on
+  ``record``); ``FleetScheduler`` compares a warm-started job's FIRST
+  measured round against the warm prediction and, beyond
+  ``staleness_tol``, calls :meth:`drop` on the offending entry with a
+  ``UserWarning`` — the job continues from its fresh measurements;
+* ``max_entries`` bounds the registry LRU-style (dict insertion order;
+  ``get``/``record`` refresh recency), so a long-lived fleet cycling
+  through many workloads cannot grow it without bound.
+
+``observed_at`` is an OPTIONAL JSON field: state dicts written by older
+sessions load fine (no timestamp -> treated as never refreshed, first in
+line for eviction), and older sessions ignore the extra field — the
+round-trip stays backward-compatible in both directions (``VERSION`` stays
+1).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -76,8 +99,18 @@ class ProfileRegistry:
 
     VERSION = 1
 
-    def __init__(self, entries: Optional[Dict[Tuple[str, str], List[Point]]] = None):
+    def __init__(
+        self,
+        entries: Optional[Dict[Tuple[str, str], List[Point]]] = None,
+        *,
+        max_entries: Optional[int] = None,
+    ):
+        if max_entries is not None and int(max_entries) < 1:
+            raise ValueError(f"max_entries must be >= 1 (got {max_entries})")
         self._entries: Dict[Tuple[str, str], List[Point]] = dict(entries or {})
+        self._observed: Dict[Tuple[str, str], float] = {}
+        self.max_entries = int(max_entries) if max_entries is not None else None
+        self._evict()
 
     # -- in-memory protocol ---------------------------------------------------
 
@@ -90,9 +123,35 @@ class ProfileRegistry:
     def keys(self):
         return self._entries.keys()
 
+    def _touch(self, key: Tuple[str, str]) -> None:
+        # Recency = dict insertion order; re-inserting moves the key to the
+        # end, so eviction pops from the front.
+        self._entries[key] = self._entries.pop(key)
+
+    def _evict(self) -> None:
+        if self.max_entries is None:
+            return
+        while len(self._entries) > self.max_entries:
+            key = next(iter(self._entries))
+            del self._entries[key]
+            self._observed.pop(key, None)
+
+    def observed_at(self, device_class: str, workload: str) -> Optional[float]:
+        """When this entry's points were last recorded (``record``'s ``now``),
+        or None for entries that predate the timestamp field."""
+        return self._observed.get((str(device_class), str(workload)))
+
+    def drop(self, device_class: str, workload: str) -> bool:
+        """Remove one entry (the staleness path: a warm prediction that the
+        first measured round contradicts).  True if something was dropped."""
+        key = (str(device_class), str(workload))
+        self._observed.pop(key, None)
+        return self._entries.pop(key, None) is not None
+
     def get(self, device_class: str, workload: str) -> Optional[List[Point]]:
         """The stored points for one (class, workload) pair, or None."""
-        pts = self._entries.get((str(device_class), str(workload)))
+        key = (str(device_class), str(workload))
+        pts = self._entries.get(key)
         if pts is None:
             return None
         ok = _valid_points(pts)
@@ -104,16 +163,28 @@ class ProfileRegistry:
                 stacklevel=2,
             )
             return None
+        self._touch(key)
         return list(ok)
 
-    def record(self, device_class: str, workload: str, points: Sequence[Point]) -> None:
+    def record(
+        self,
+        device_class: str,
+        workload: str,
+        points: Sequence[Point],
+        *,
+        now: Optional[float] = None,
+    ) -> None:
         """Merge one estimate's points into its entry (``add_point``
-        semantics: duplicate ``x`` replaces — freshest observation wins)."""
+        semantics: duplicate ``x`` replaces — freshest observation wins).
+        ``now`` overrides the ``observed_at`` timestamp (tests)."""
         key = (str(device_class), str(workload))
         merged = PiecewiseLinearFPM.from_points(self._entries.get(key, []))
         for x, s in points:
             merged.add_point(float(x), float(s))
+        self._entries.pop(key, None)
         self._entries[key] = [(float(x), float(s)) for x, s in merged.as_points()]
+        self._observed[key] = float(now) if now is not None else time.time()
+        self._evict()
 
     # -- the fleet-facing pair ------------------------------------------------
 
@@ -135,6 +206,8 @@ class ProfileRegistry:
         device_classes: Sequence[str],
         workload: Optional[str],
         models: Sequence[PiecewiseLinearFPM],
+        *,
+        now: Optional[float] = None,
     ) -> None:
         """Fold a retiring job's learned estimates back in, processor by
         processor in index order (same-class processors merge into one
@@ -144,22 +217,26 @@ class ProfileRegistry:
         for cls_, m in zip(device_classes, models):
             pts = m.as_points() if getattr(m, "num_points", 0) > 0 else []
             if pts:
-                self.record(cls_, workload, pts)
+                self.record(cls_, workload, pts, now=now)
 
     # -- persistence (the state_dict protocol + JSON on disk) -----------------
 
     def state_dict(self) -> Dict:
-        return {
-            "version": self.VERSION,
-            "entries": [
-                {"device_class": c, "workload": w, "points": [[x, s] for x, s in pts]}
-                for (c, w), pts in sorted(self._entries.items())
-            ],
-        }
+        out = []
+        for (c, w), pts in sorted(self._entries.items()):
+            e = {"device_class": c, "workload": w, "points": [[x, s] for x, s in pts]}
+            ts = self._observed.get((c, w))
+            if ts is not None:
+                e["observed_at"] = ts  # optional field: older readers ignore it
+            out.append(e)
+        return {"version": self.VERSION, "entries": out}
 
     @classmethod
-    def from_state(cls, state: Dict) -> "ProfileRegistry":
+    def from_state(
+        cls, state: Dict, *, max_entries: Optional[int] = None
+    ) -> "ProfileRegistry":
         entries: Dict[Tuple[str, str], List[Point]] = {}
+        observed: Dict[Tuple[str, str], float] = {}
         raw = state.get("entries")
         if not isinstance(raw, list):
             raise ValueError("registry state has no entries list")
@@ -173,8 +250,14 @@ class ProfileRegistry:
                     stacklevel=2,
                 )
                 continue
-            entries[(str(e["device_class"]), str(e["workload"]))] = pts
-        return cls(entries)
+            key = (str(e["device_class"]), str(e["workload"]))
+            entries[key] = pts
+            ts = e.get("observed_at")
+            if isinstance(ts, (int, float)) and ts == ts:
+                observed[key] = float(ts)
+        reg = cls(entries, max_entries=max_entries)
+        reg._observed = {k: observed[k] for k in observed if k in reg._entries}
+        return reg
 
     def save(self, path: str) -> None:
         tmp = f"{path}.tmp"

@@ -56,16 +56,39 @@ spec.workload)`` into the new job's models, so it warm-starts from a
 repartition instead of the cold even split; ``retire`` folds what the job
 learned back into the registry.  See ``registry.py`` for the key scheme and
 the corrupt-entry fallback policy.
+
+Warm profiles can be STALE (driver update, thermal re-limit): with
+``staleness_tol`` set, a warm-started job's FIRST measured round is compared
+against what the warm models predicted for the distribution it just ran; a
+device class whose rows deviate beyond the tolerance has its registry entry
+dropped (``registry.drop``) with a ``UserWarning``, and the job simply
+continues from its fresh measurements — a stale profile costs one noisy
+round, never a poisoned registry.
+
+Hierarchical fleets
+-------------------
+
+With ``groups=`` (a per-processor group assignment, same convention as
+``Scheduler(groups=...)``), every repartition and ``rebalance`` routes
+through the two-level :class:`~repro.core.hierarchy.Hierarchy` solve:
+group aggregates answer the outer ``t*`` bisection, inner per-group solves
+run on cache-resident ``[p_g, k]`` sub-banks.  On the jax backend the inner
+solves run host-side on zero-copy views of the stacked device carry — the
+carry still takes the ONE-program fold-in per round, but the partition
+leaves the ``[q, p, k]`` monolith untouched, which is what breaks the
+p=10^4 cache wall (``benchmarks/fleet_scale.py --groups``).
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.fpm import PiecewiseLinearFPM, imbalance
+from ..core.hierarchy import Hierarchy
 from ..core.modelbank import ModelBank
 from ..core.partition import (
     _partition_units_bank,
@@ -135,6 +158,9 @@ class _Job:
     pending_obs: List[Tuple[List[int], List[float]]] = field(default_factory=list)
     # host-side bank cache over `models`, dropped on every fold
     _bank: Optional[ModelBank] = None
+    # True when admit() warm-started this job from the profile registry —
+    # arms the one-shot staleness check on the first measured round
+    _warm_from_registry: bool = False
 
     def flush(self) -> None:
         """Materialize deferred observations into the scalar models (same
@@ -178,12 +204,45 @@ class FleetScheduler:
         device_classes: Optional[Sequence[str]] = None,
         alpha: Optional[float] = None,  # collective-cost overrides for
         beta: Optional[float] = None,  # executors without alpha/beta attrs
+        groups: Optional[Sequence[int]] = None,
+        sharding: Optional[str] = None,
+        max_group_knots: int = 64,
+        staleness_tol: Optional[float] = None,
+        compilation_cache_dir: Optional[str] = None,
     ):
         if backend not in ("scalar", "numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
         p = int(num_procs)
         if p < 1:
             raise ValueError("need at least one processor")
+        if sharding not in (None, "shard_map"):
+            raise ValueError(f"unknown sharding mode {sharding!r}")
+        if sharding is not None and backend != "jax":
+            raise ValueError('sharding="shard_map" requires backend="jax"')
+        if groups is not None:
+            if backend == "scalar":
+                raise ValueError(
+                    'hierarchical fleet requires a banked backend '
+                    '("numpy" or "jax")'
+                )
+            if len(groups) != p:
+                raise ValueError(
+                    f"groups must be a length-p assignment "
+                    f"(got {len(groups)} for p={p})"
+                )
+            self.groups: Optional[List[int]] = [int(v) for v in groups]
+        else:
+            self.groups = None
+        self.sharding = sharding
+        self.max_group_knots = int(max_group_knots)
+        self._hier_cache: Dict[int, Hierarchy] = {}  # lane -> per-stack solver
+        self._hier_stack_ref = None  # carry the cache was built against
+        self.staleness_tol = float(staleness_tol) if staleness_tol is not None else None
+        self.compilation_cache_dir = compilation_cache_dir
+        if compilation_cache_dir is not None and backend == "jax":
+            from ..core.modelbank_jax import enable_compilation_cache
+
+            enable_compilation_cache(compilation_cache_dir)
         self.p = p
         self._backend = backend
         self.dtype = dtype
@@ -289,6 +348,7 @@ class FleetScheduler:
             w = [int(v) for v in spec.warm_start_d]
             if sum(w) != n or len(w) != self.p:
                 raise ValueError("warm_start_d must be a length-p partition of n")
+        warm_from_registry = False
         if models is not None:
             if len(models) != self.p:
                 raise ValueError("models length != num_procs")
@@ -304,6 +364,9 @@ class FleetScheduler:
             and self.device_classes is not None
         ):
             job_models = self.registry.warm_models(self.device_classes, spec.workload)
+            warm_from_registry = any(
+                getattr(m, "num_points", 0) > 0 for m in job_models
+            )
         else:
             job_models = [PiecewiseLinearFPM() for _ in range(self.p)]
         budget = int(spec.probe_budget) if spec.probe_budget is not None else 2 * self.p
@@ -319,6 +382,7 @@ class FleetScheduler:
             empty_rows=np.asarray(
                 [getattr(m, "num_points", 0) == 0 for m in job_models], dtype=bool
             ),
+            _warm_from_registry=warm_from_registry,
         )
         self._stack_dirty = True
         return name
@@ -479,6 +543,12 @@ class FleetScheduler:
             for k, job in enumerate(to_measure):
                 d = job.pending_d
                 times = [float(v) for v in T[k]]
+                if job.it == 0 and job._warm_from_registry:
+                    # job.models still hold the admit-time warm estimates
+                    # (pending_obs defers the fold into the scalar mirrors),
+                    # so this compares the warm PREDICTION for the round the
+                    # job just ran against what was actually measured.
+                    self._staleness_check(job, d, times)
                 job.pending_obs.append((list(d), times))
                 job.invalidate()
                 job.history.append((list(d), list(times)))
@@ -581,6 +651,43 @@ class FleetScheduler:
 
     # -- internals ------------------------------------------------------------
 
+    def _staleness_check(self, job: _Job, d, times) -> None:
+        """One-shot after a warm-started job's first measured round: a device
+        class whose warm prediction misses the measurement beyond
+        ``staleness_tol`` (median relative error over its rows — robust to a
+        single straggler) has its registry entry dropped with a warning."""
+        job._warm_from_registry = False
+        if (
+            self.staleness_tol is None
+            or self.registry is None
+            or self.device_classes is None
+            or job.spec.workload is None
+        ):
+            return
+        errs: Dict[str, List[float]] = {}
+        for i, cls_ in enumerate(self.device_classes):
+            di, ti = int(d[i]), float(times[i])
+            m = job.models[i]
+            if di <= 0 or ti <= 0 or getattr(m, "num_points", 0) == 0:
+                continue  # cold or unmeasured row: nothing was predicted
+            pred = float(m.time(float(di)))
+            if not (pred > 0):
+                continue
+            errs.setdefault(cls_, []).append(abs(ti - pred) / pred)
+        for cls_, es in errs.items():
+            med = sorted(es)[len(es) // 2]
+            if med > self.staleness_tol and self.registry.drop(
+                cls_, job.spec.workload
+            ):
+                warnings.warn(
+                    f"stale warm profile ({cls_!r}, {job.spec.workload!r}): "
+                    f"first measured round deviates {med:.0%} from the warm "
+                    f"prediction (tol {self.staleness_tol:.0%}); entry "
+                    "dropped, job continues from fresh measurements",
+                    UserWarning,
+                    stacklevel=3,
+                )
+
     def _finish(self, job: _Job, d, t, converged: bool, imb: float) -> None:
         job.flush()  # diagnostics["models"] surfaces the live estimates
         job.status = "done"
@@ -638,6 +745,8 @@ class FleetScheduler:
             # check, with the job named (the batched call couldn't say who)
             if bool(np.any((job.icaps > 0) & job.empty_rows)):
                 raise ValueError(f"job {job.spec.name!r}: empty FPM")
+        if self.groups is not None:
+            return self._repartition_hier(jobs)
         if self._backend == "scalar":
             # The seed per-model loop (always the exact completion — the
             # session-knob demotion semantics of Scheduler._completion_for).
@@ -691,6 +800,72 @@ class FleetScheduler:
         )
         self.device_dispatches += 1
         return [[int(v) for v in d[job.lane]] for job in jobs]
+
+    def _repartition_hier(self, jobs: List[_Job]) -> List[List[int]]:
+        """The two-level route (``groups=`` set): per-job Hierarchy solves
+        with cache-resident inner sub-banks.  On the jax backend the lane
+        banks are ZERO-COPY numpy views of the stacked device carry (CPU
+        devices share the host buffer), the outer solve runs host-side on
+        the tiny ``[g, k_g]`` aggregate, and the inner solves run as ONE
+        block program per job (``device_dispatches`` += 1 each) — trading
+        the single stacked ``[q, p, k]`` program, whose working set falls
+        out of cache at p >= 10^4, for q cache-blocked ones; the carry
+        keeps taking the one-program fold-in."""
+        if self._backend == "jax":
+            stacked = self._ensure_stack()
+            xs = np.asarray(stacked.xs)
+            ss = np.asarray(stacked.ss)
+            counts = np.asarray(stacked.counts)
+            if xs.dtype != np.float64:
+                xs = xs.astype(np.float64)
+                ss = ss.astype(np.float64)
+            if counts.dtype != np.int64:
+                counts = counts.astype(np.int64)
+
+            def lane_bank(job: _Job) -> ModelBank:
+                return ModelBank(
+                    xs=xs[job.lane], ss=ss[job.lane], counts=counts[job.lane]
+                )
+
+        else:
+
+            def lane_bank(job: _Job) -> ModelBank:
+                return job.bank()
+
+        inner_backend = "jax" if self._backend == "jax" else "numpy"
+        # Per-lane Hierarchy instances (and their aggregate caches) are
+        # reusable until the NEXT fold replaces the stacked carry — in the
+        # frozen-model rebalance regime that makes every round after the
+        # first pay only the outer bisection + inner block programs.
+        if self._backend == "jax":
+            stacked_ref = self._stacked
+            if self._hier_stack_ref is not stacked_ref:
+                self._hier_stack_ref = stacked_ref
+                self._hier_cache = {}
+        out = []
+        for job in jobs:
+            h = self._hier_cache.get(job.lane) if self._backend == "jax" else None
+            if h is None:
+                h = Hierarchy.from_bank(
+                    lane_bank(job),
+                    self.groups,
+                    backend=inner_backend,
+                    sharding=self.sharding,
+                    max_group_knots=self.max_group_knots,
+                    dtype=self.dtype,
+                )
+                if self._backend == "jax":
+                    self._hier_cache[job.lane] = h
+            d = h.partition_units(
+                int(job.spec.n),
+                np.asarray(job.icaps, dtype=np.int64),
+                min_units=int(job.spec.min_units),
+                completion=job.spec.completion,
+            )
+            if inner_backend == "jax":
+                self.device_dispatches += 1
+            out.append([int(v) for v in d])
+        return out
 
     def _fold(self, measured: List[_Job], D: np.ndarray, T: np.ndarray) -> None:
         """One stacked fold-in of this round's observations (jax backend;
