@@ -59,8 +59,10 @@ from .executor import (
     CallableExecutor,
     Executor,
     FleetExecutor,
+    FleetRoundLog,
     RoundLog,
     SimulatedExecutor,
+    TraceExecutor2D,
 )
 from .fpm import AnalyticModel, ConstantModel, PiecewiseLinearFPM, SpeedModel, imbalance
 from .modelbank import ModelBank, aggregate_groups, group_members
@@ -109,6 +111,7 @@ __all__ = [
     "BatchedSimulatedExecutor2D",
     "CallableExecutor",
     "FleetExecutor",
+    "FleetRoundLog",
     "ConstantModel",
     "DFPAResult",
     "Executor",
@@ -124,6 +127,7 @@ __all__ = [
     "RoundLog",
     "Scheduler",
     "SimulatedExecutor",
+    "TraceExecutor2D",
     "SpeedModel",
     "SpeedStore",
     "sample_analytic_points",

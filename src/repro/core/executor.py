@@ -27,8 +27,10 @@ __all__ = [
     "SimulatedExecutor",
     "BatchedSimulatedExecutor",
     "BatchedSimulatedExecutor2D",
+    "TraceExecutor2D",
     "CallableExecutor",
     "RoundLog",
+    "FleetRoundLog",
 ]
 
 
@@ -39,6 +41,23 @@ class RoundLog:
     d: List[int]
     times: List[float]
     wall_cost: float  # max(times) + modelled collective overhead
+
+
+@dataclass
+class FleetRoundLog:
+    """One multi-tenant fleet round on a TIME-SLICED fleet: every measuring
+    tenant's distribution and per-processor times, costed by the busiest
+    processor's SUM across tenants — the round's true wall-clock when each
+    processor serves its tenants back to back.  (Logging one ``RoundLog``
+    per tenant at ``max(times)`` each under-reports the round by up to q×:
+    a tenant's own slice finishing fast does not free the processor that is
+    still working through the other tenants' slices.)"""
+
+    names: List[str]
+    D: List[List[int]]  # D[k][i]: units of tenant k on processor i
+    times: List[List[float]]  # per-(tenant, processor) slice times
+    proc_busy: List[float]  # per-processor sum across tenants
+    wall_cost: float  # max(proc_busy) + modelled collective overhead
 
 
 class Executor(Protocol):
@@ -220,6 +239,66 @@ class BatchedSimulatedExecutor2D:
 
     def round_cost(self, times: Sequence[float]) -> float:
         return max(times) + self.alpha + self.beta * self.num_procs
+
+    @property
+    def total_cost(self) -> float:
+        return sum(l.wall_cost for l in self.logs)
+
+
+@dataclass
+class TraceExecutor2D:
+    """Trace-driven fleet executor: the ground-truth time function takes the
+    current TRACE CLOCK — ``time_fn_trace_2d(X[q, p], t) -> T[q, p]`` — so
+    drifting speed functions, diurnal thermal effects and straggler
+    throttles are functions of *when* a round runs, not of how many rounds
+    ran.  The serving harness advances ``now`` between epochs (simulated
+    trace seconds); each ``run_jobs`` call evaluates the fleet at that
+    instant and logs ONE :class:`FleetRoundLog` with the time-sliced round
+    cost (the busiest processor's sum across tenants).  Noise mirrors
+    ``BatchedSimulatedExecutor2D`` (multiplicative, seeded ``rng``).
+    """
+
+    time_fn_trace_2d: Callable  # (X[q, p], t) -> T[q, p], X <= 0 ignored
+    p: int
+    now: float = 0.0  # the trace clock, advanced by the harness
+    alpha: float = 0.0
+    beta: float = 0.0
+    noise: float = 0.0
+    rng: object = None
+    logs: List[FleetRoundLog] = field(default_factory=list)
+
+    @property
+    def num_procs(self) -> int:
+        return self.p
+
+    def run_jobs(self, names: Sequence[str], D):
+        import numpy as np
+
+        X = np.asarray(D, dtype=np.float64)
+        T = np.asarray(self.time_fn_trace_2d(X, float(self.now)), dtype=np.float64)
+        T = np.where(X > 0, T, 0.0)
+        if self.noise > 0.0 and self.rng is not None:
+            jitter = 1.0 + self.noise * self.rng.standard_normal(X.shape)
+            T = np.where(X > 0, np.maximum(T * jitter, 1e-12), 0.0)
+        busy = T.sum(axis=0)
+        self.logs.append(
+            FleetRoundLog(
+                names=[str(nm) for nm in names],
+                D=[[int(v) for v in row] for row in X],
+                times=[[float(v) for v in row] for row in T],
+                proc_busy=[float(v) for v in busy],
+                wall_cost=float(busy.max()) + self.alpha + self.beta * self.p,
+            )
+        )
+        return T
+
+    def run(self, d: Sequence[int]) -> List[float]:
+        """Single-job adapter, so the trace executor also satisfies the
+        plain ``Executor`` protocol for one-tenant fleets."""
+        return [float(v) for v in self.run_jobs(["job"], [list(d)])[0]]
+
+    def round_cost(self, times: Sequence[float]) -> float:
+        return max(times) + self.alpha + self.beta * self.p
 
     @property
     def total_cost(self) -> float:

@@ -728,10 +728,20 @@ class JaxModelBank:
         )
 
     @classmethod
-    def stack(cls, banks: Sequence["JaxModelBank"]) -> "JaxModelBank":
+    def stack(
+        cls, banks: Sequence["JaxModelBank"], min_k: Optional[int] = None
+    ) -> "JaxModelBank":
         """Stack ``q`` same-``p`` banks into one ``[q, p, k]`` bank so every
-        column's ``t*`` bisects simultaneously (the 2-D partitioner)."""
+        column's ``t*`` bisects simultaneously (the 2-D partitioner).
+
+        ``min_k`` reserves padded knot capacity up front: a serving fleet
+        that restacks with a fixed ``min_k`` keeps the carry's shapes — and
+        therefore its compiled programs — identical across sessions, and
+        ``fold_in`` never pays a growth recompile until a row actually
+        exceeds the reservation."""
         k = max(int(b.xs.shape[-1]) for b in banks)
+        if min_k is not None:
+            k = max(k, int(min_k))
         padded = [b._padded_to(k) for b in banks]
         flags = [b.monotone for b in banks]
         return cls(
@@ -761,11 +771,15 @@ class JaxModelBank:
             return self.xs, self.ss
         # padding repeats the last column (== the row's last point, or the
         # zeros of an empty row) — same convention as from_point_lists.
-        rep_x = jnp.repeat(self.xs[..., -1:], extra, axis=-1)
-        rep_s = jnp.repeat(self.ss[..., -1:], extra, axis=-1)
+        # Done on the host: the source width varies bank to bank, and device
+        # repeat/concatenate would compile a fresh (k_src -> k) program for
+        # every width seen; a [p, k] pad is host-trivial and jnp.asarray is
+        # a transfer, not a trace.
+        xs = np.asarray(self.xs)
+        ss = np.asarray(self.ss)
         return (
-            jnp.concatenate([self.xs, rep_x], axis=-1),
-            jnp.concatenate([self.ss, rep_s], axis=-1),
+            jnp.asarray(np.concatenate([xs, np.repeat(xs[..., -1:], extra, axis=-1)], axis=-1)),
+            jnp.asarray(np.concatenate([ss, np.repeat(ss[..., -1:], extra, axis=-1)], axis=-1)),
         )
 
     def to_bank(self) -> ModelBank:

@@ -677,6 +677,16 @@ class Scheduler:
             groups = [self.groups[i] for i in surviving]
             join_group = groups[donor_pos] if groups else 0
             groups = groups + [join_group] * joined
+        # The detector's strike counts are keyed by group index; hand the
+        # new scheduler a REMAPPED copy (survivors keep their counts under
+        # their new indices, departed groups drop out, joiners start clean)
+        # — passing it through unmapped made every survivor inherit its
+        # left neighbour's strikes after a leave() and falsely quarantinable.
+        detector = (
+            self.detector.remap(surviving, joined)
+            if self.detector is not None
+            else None
+        )
         new = Scheduler(
             SpeedStore.from_models(models, backend=self.backend, dtype=self.dtype),
             policy=self.policy,
@@ -686,7 +696,7 @@ class Scheduler:
             caps=caps,
             smooth=self.smooth,
             backend=self.backend,
-            detector=self.detector,
+            detector=detector,
             completion=self.completion,
             groups=groups,
             sharding=self.sharding,
@@ -705,6 +715,9 @@ class Scheduler:
         self.caps = other.caps
         self.groups = list(other.groups) if other.groups is not None else None
         self._ema = {}  # group indices shifted; stale EMA keys are invalid
+        # ... and so are the detector's strike keys: adopt the remapped
+        # detector resize() built (same staleness reason as the EMA reset).
+        self.detector = other.detector
 
     def join(self, count: int = 1, *, caps=_UNSET) -> "Scheduler":
         """``count`` new groups join; warm re-partition, in place."""

@@ -209,6 +209,9 @@ class FleetScheduler:
         max_group_knots: int = 64,
         staleness_tol: Optional[float] = None,
         compilation_cache_dir: Optional[str] = None,
+        detector=None,
+        reserve_knots: Optional[int] = None,
+        quantize: float = 0.0,
     ):
         if backend not in ("scalar", "numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -257,6 +260,23 @@ class FleetScheduler:
         self._stacked = None  # the [q, p, k] device carry (jax backend)
         self._stack_names: List[str] = []
         self._stack_dirty = True
+        # per-REPLICA straggler strike automaton (serving path); lazily
+        # constructed by straggler_actions() when not passed in
+        self.detector = detector
+        # reserved padded knot capacity for the stacked carry: with a fixed
+        # reservation the [q, p, k] shapes are fully predictable (k =
+        # reserve_knots until a row outgrows it), so a serving deployment
+        # can precompile its fleet shapes and fold_in never pays a growth
+        # recompile mid-trace
+        self.reserve_knots = int(reserve_knots) if reserve_knots is not None else None
+        # fold-position grid pitch (relative, e.g. 0.05): when set, EVERY
+        # fold in this fleet — measured rounds and observe() alike — snaps
+        # its x onto one geometric grid.  A knot that is on the grid is
+        # refreshed (replaced in place) by the next fold in its cell; a
+        # single un-snapped fold would instead leave a knot no later
+        # quantized fold can ever overwrite, and a drifting replica's
+        # prediction at that exact x would stay stale forever.
+        self.quantize = float(quantize)
         self.rounds = 0
         self.restacks = 0
         # device program launches (stacked partitions + fold-ins): THE
@@ -418,13 +438,17 @@ class FleetScheduler:
         caps=...,
         eps: Optional[float] = None,
         min_units: Optional[int] = None,
+        max_iter: Optional[int] = None,
+        probe_budget=...,
     ) -> None:
         """Change a running job's shape.  The job keeps its learned
         estimates but resets its loop state (seen set, best trackers, probe
         budget, round count) — from the next round it behaves exactly like a
         freshly admitted job warm-started from the same models (its first
         new-``n`` distribution is a repartition, not an even split, whenever
-        every model has a point)."""
+        every model has a point).  ``max_iter``/``probe_budget`` override
+        the job's loop limits (a serving caller re-running a warm tenant
+        for one measured round passes ``max_iter=1``)."""
         job = self._jobs[name]
         s = job.spec
         spec = JobSpec(
@@ -433,8 +457,8 @@ class FleetScheduler:
             eps=float(eps) if eps is not None else s.eps,
             caps=s.caps if caps is ... else caps,
             min_units=int(min_units) if min_units is not None else s.min_units,
-            max_iter=s.max_iter,
-            probe_budget=s.probe_budget,
+            max_iter=int(max_iter) if max_iter is not None else s.max_iter,
+            probe_budget=s.probe_budget if probe_budget is ... else probe_budget,
             completion=s.completion,
             workload=s.workload,
             warm_start_d=None,
@@ -454,6 +478,12 @@ class FleetScheduler:
         job.seen = {}
         job.history = []
         job.best_d, job.best_t, job.best_imb = [], [], float("inf")
+        if probe_budget is not ...:
+            job.probe_budget = (
+                int(spec.probe_budget)
+                if spec.probe_budget is not None
+                else 2 * self.p
+            )
         job.probes_left = job.probe_budget
         job.pending_d = None
         # the bank itself is unchanged — no restack needed
@@ -539,7 +569,13 @@ class FleetScheduler:
             # Phase 4: ONE stacked fold-in (device carry first — it restacks
             # from the PRE-fold host models if dirty — then the host
             # mirrors), and the per-job convergence settle of autotune.
-            self._fold(to_measure, D.astype(np.float64), T)
+            # With a quantize pitch the fold positions snap onto the grid
+            # (convergence bookkeeping below stays on the exact d).
+            if self.quantize > 0.0:
+                Df, Tf = self._snap_grid(D.astype(np.float64), T, self.quantize)
+            else:
+                Df, Tf = D.astype(np.float64), T
+            self._fold(to_measure, Df, Tf)
             for k, job in enumerate(to_measure):
                 d = job.pending_d
                 times = [float(v) for v in T[k]]
@@ -549,7 +585,9 @@ class FleetScheduler:
                     # so this compares the warm PREDICTION for the round the
                     # job just ran against what was actually measured.
                     self._staleness_check(job, d, times)
-                job.pending_obs.append((list(d), times))
+                job.pending_obs.append(
+                    ([float(v) for v in Df[k]], [float(v) for v in Tf[k]])
+                )
                 job.invalidate()
                 job.history.append((list(d), list(times)))
                 job.seen[tuple(d)] = list(times)
@@ -620,6 +658,157 @@ class FleetScheduler:
             out[job.spec.name] = list(d)
         self.rounds += 1
         return out
+
+    @staticmethod
+    def _snap_grid(d: np.ndarray, t: np.ndarray, pitch: float):
+        """Snap fold positions ``d`` onto the geometric grid of relative
+        pitch ``pitch``; ``t`` is rescaled so the observed SPEED ``d/t`` is
+        kept exact (only the knot position moves, by at most ``pitch``)."""
+        d = np.asarray(d, dtype=np.float64)
+        t = np.asarray(t, dtype=np.float64)
+        h = np.log1p(float(pitch))
+        ok = (d > 0) & (t > 0)
+        safe = np.where(ok, d, 1.0)
+        dq = np.where(ok, np.exp(np.round(np.log(safe) / h) * h), d)
+        return dq, np.where(ok, t * dq / safe, t)
+
+    def observe(
+        self,
+        times: Dict[str, Sequence[float]],
+        *,
+        quantize: Optional[float] = None,
+    ) -> None:
+        """The serving fast path's other half: fold externally-measured
+        per-replica times for the given tenants' CURRENT distributions into
+        the fleet's estimates — one stacked fold-in program, no repartition
+        (pair with :meth:`rebalance` for the full serving epoch; call
+        :meth:`straggler_actions` BEFORE this so strike predictions come
+        from the pre-epoch estimates).
+
+        ``quantize`` (relative pitch, e.g. ``0.05``) snaps each fold's
+        ``x`` onto a geometric grid — the observed SPEED is kept exact,
+        only the knot position moves by at most ``quantize``.  Long-running
+        sessions whose per-epoch allocations drift then touch a bounded
+        knot set (duplicate-``x`` folds replace in place), so the stacked
+        carry stops growing and its compiled programs stay fixed; without
+        it every epoch adds a knot per row and the padded width's doubling
+        growth recompiles both stacked programs each time it fires.
+        Defaults to the fleet's construction-time ``quantize`` pitch so
+        measured rounds and serving folds share one grid (see __init__:
+        mixed-grid folds leave knots that can never be refreshed)."""
+        pitch = self.quantize if quantize is None else float(quantize)
+        jobs: List[_Job] = []
+        Ds: List[np.ndarray] = []
+        Ts: List[np.ndarray] = []
+        for name, t in times.items():
+            job = self._jobs[name]
+            t = np.asarray([float(v) for v in t], dtype=np.float64)
+            if len(t) != self.p:
+                raise ValueError(f"job {name!r}: times length != num_procs")
+            if len(job.d) != self.p:
+                raise ValueError(f"job {name!r} has no current distribution")
+            observed = [float(v) for v in t]
+            d = np.asarray(job.d, dtype=np.float64)
+            if pitch > 0.0:
+                d, t = self._snap_grid(d, t, pitch)
+            jobs.append(job)
+            Ds.append(d)
+            Ts.append(t)
+            job.times = observed  # live view keeps the un-snapped walls
+        if not jobs:
+            return
+        D = np.asarray(Ds, dtype=np.float64)
+        T = np.asarray(Ts, dtype=np.float64)
+        self._fold(jobs, D, T)
+        for job, d, t in zip(jobs, Ds, Ts):
+            job.pending_obs.append(([float(v) for v in d], [float(v) for v in t]))
+            job.invalidate()
+        self.rounds += 1
+
+    def straggler_actions(
+        self, times: Dict[str, Sequence[float]], *, auto_reprofile: bool = True
+    ):
+        """Scan one serving epoch's observed per-replica times against the
+        PRE-fold estimates (call before :meth:`observe`); returns one
+        ``StragglerAction`` per REPLICA.
+
+        A replica's health signal is the MEDIAN observed/predicted ratio
+        across the tenants it served that epoch — a replica-wide throttle
+        inflates every tenant's slice, while one tenant's own noise cannot
+        strike the replica.  REPROFILE actions are applied via
+        :meth:`reprofile_replica` unless ``auto_reprofile=False``;
+        QUARANTINE is reported for the caller to act on (drop the replica
+        and rebuild/resize the fleet)."""
+        from ..runtime.straggler import StragglerAction, StragglerDetector
+
+        if self.detector is None:
+            self.detector = StragglerDetector()
+        det = self.detector
+        per_replica: List[List[Tuple[float, int, float, float]]] = [
+            [] for _ in range(self.p)
+        ]
+        for name, t in times.items():
+            job = self._jobs[name]
+            bank = job.bank()
+            d = np.asarray(job.d, dtype=np.float64)
+            obs = np.asarray(t, dtype=np.float64)
+            pred = bank.time(d)
+            usable = (bank.counts > 0) & (d > 0) & (obs > 0) & (pred > 0)
+            for i in np.nonzero(usable)[0]:
+                i = int(i)
+                per_replica[i].append(
+                    (float(obs[i] / pred[i]), int(d[i]), float(pred[i]), float(obs[i]))
+                )
+        actions = [StragglerAction.NONE] * self.p
+        for i, rows in enumerate(per_replica):
+            if not rows:
+                continue
+            rows.sort()
+            ratio, di, predicted, observed = rows[len(rows) // 2]
+            det.history.append((i, di, predicted, observed, ratio))
+            actions[i] = det._strike(i, ratio)
+        if auto_reprofile:
+            for i, act in enumerate(actions):
+                if act is StragglerAction.REPROFILE:
+                    self.reprofile_replica(i)
+        return actions
+
+    def reprofile_replica(self, i: int) -> None:
+        """Invalidate replica ``i``'s estimate in EVERY job (its speed
+        function is stale fleet-wide — thermal throttle, contention): keep
+        only a point rebuilt from each job's LAST OBSERVATION at its current
+        allocation so the partitioner stays feasible where possible, and
+        mark the stack dirty so the carry rebuilds from the pruned models.
+        A row left empty is healed by the next :meth:`observe` fold before
+        any repartition needs it.
+
+        The kept point must come from the observation, not from the old
+        model: the model's knot at the current allocation is exactly the
+        prediction that just struck (``Scheduler.reprofile`` can keep the
+        model point because its un-quantized measured loop guarantees that
+        knot IS the last observation — a quantized serving fleet folds on
+        the grid beside it, so keeping ``x == d[i]`` would preserve
+        precisely the stale knot and discard every fresh one)."""
+        i = int(i)
+        for job in self._jobs.values():
+            job.flush()
+            m = job.models[i]
+            if getattr(m, "num_points", 0) == 0:
+                continue
+            pts = []
+            if len(job.d) == self.p and len(job.times) == self.p:
+                di, ti = float(job.d[i]), float(job.times[i])
+                if di > 0 and ti > 0:
+                    if self.quantize > 0.0:
+                        dq, tq = self._snap_grid([di], [ti], self.quantize)
+                        di, ti = float(dq[0]), float(tq[0])
+                    pts = [(di, di / ti)]
+            job.models[i] = (
+                PiecewiseLinearFPM.from_points(pts) if pts else PiecewiseLinearFPM()
+            )
+            job.empty_rows[i] = getattr(job.models[i], "num_points", 0) == 0
+            job.invalidate()
+        self._stack_dirty = True
 
     def run(self, executor, *, max_rounds: Optional[int] = None) -> Dict[str, Partition]:
         """Drive rounds until every admitted job finishes (each is bounded
@@ -717,6 +906,30 @@ class FleetScheduler:
         for lane, nm in enumerate(names):
             self._jobs[nm].lane = lane
         self._stack_names = names
+        if self.reserve_knots is not None:
+            # Keep the reservation binding: rows past half the budget are
+            # thinned (even decimation, endpoints kept) so the padded width
+            # stays exactly reserve_knots — registry-merged warm models can
+            # arrive with arbitrarily many knots — and the remaining half is
+            # fold headroom before any growth recompile.
+            budget = max(self.reserve_knots // 2, 2)
+            for nm in names:
+                job = self._jobs[nm]
+                job.flush()
+                thinned = False
+                for i, m in enumerate(job.models):
+                    if getattr(m, "num_points", 0) > budget:
+                        pts = m.as_points()
+                        idx = sorted(set(
+                            int(round(v))
+                            for v in np.linspace(0, len(pts) - 1, budget)
+                        ))
+                        job.models[i] = PiecewiseLinearFPM.from_points(
+                            [pts[j] for j in idx]
+                        )
+                        thinned = True
+                if thinned:
+                    job.invalidate()
         if self._backend == "jax" and names:
             from ..core.modelbank_jax import JaxModelBank
 
@@ -724,7 +937,8 @@ class FleetScheduler:
                 [
                     JaxModelBank.from_bank(self._jobs[nm].bank(), dtype=self.dtype)
                     for nm in names
-                ]
+                ],
+                min_k=self.reserve_knots,
             )
             self.restacks += 1
         self._stack_dirty = False

@@ -5,6 +5,32 @@ decode throughput is a *nonlinear* function of batch size (KV-cache
 bandwidth, batch-dependent kernel efficiency, HBM spill past a batch
 threshold) — a speed function s(x), unknown a priori on a heterogeneous
 fleet.  ``ReplicaDispatcher`` runs DFPA over request chunks.
+
+Serving under traffic
+---------------------
+
+At serving timescales the paper's headline claim — the cost of the optimal
+distribution is orders of magnitude below the execution it optimizes — only
+holds if the *online lifecycle* is cheap: the warm state must survive every
+epoch.  The intended loop, per traffic epoch (see
+``benchmarks/serve_trace.py`` for the full harness and
+``examples/serve_trace_walkthrough.py`` for a small walkthrough):
+
+1. ``balance_fleet(tenants)`` at tenant-set changes (admit/retire ride the
+   WARM fleet session — jobs, compiled stacked programs and per-lane caches
+   all persist; only a backend or replica-count change pays a fresh
+   session, and even then an attached registry carries the profiles over);
+2. ``fleet.rebalance(loads)`` every epoch as tenant traffic drifts — one
+   stacked device program, no measurement;
+3. ``fleet.straggler_actions(times)`` on the epoch's measured per-replica
+   times BEFORE folding them (predictions must come from the pre-epoch
+   estimates) — REPROFILE re-learns a throttled replica, QUARANTINE tells
+   the caller to drop it;
+4. ``fleet.observe(times)`` folds the epoch's observations into the
+   stacked carry (one fold-in program).
+
+Epoch wall-clock on a time-sliced fleet is the busiest replica's SUM across
+tenants (``FleetRoundLog.wall_cost``), not any single tenant's max.
 """
 
 from __future__ import annotations
@@ -17,7 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.executor import Executor, RoundLog
+from ..core.executor import Executor, FleetRoundLog, RoundLog
 from ..core.scheduler import Partition, Policy, Scheduler
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_cache, prefill
@@ -75,41 +101,71 @@ class ReplicaDispatcher:
     bank, one partition + one fold-in program per round for ALL tenants —
     and leaves the warm fleet session on ``self.fleet`` for the online
     lifecycle (``admit`` / ``retire`` / ``resize`` / further ``step`` s).
-    With a ``ProfileRegistry`` (plus ``device_classes``) and per-tenant
-    ``workload`` tags, tenants warm-start from profiles saved by earlier
-    sessions instead of paying cold CPM probes.
+    Repeated ``balance_fleet`` calls REUSE that warm session (new tenants
+    admitted, absent ones retired, changed ``n`` resized) so the compiled
+    stacked programs and per-lane caches survive; only a backend or
+    replica-count change pays a fresh session.  With a ``ProfileRegistry``
+    (plus ``device_classes``) and per-tenant ``workload`` tags, tenants
+    warm-start from profiles saved by earlier sessions instead of paying
+    cold CPM probes.
     """
 
     replica_run: Callable[[int, int], float]
     num_replicas: int
     eps: float = 0.1
-    logs: List[RoundLog] = field(default_factory=list)
+    logs: List[object] = field(default_factory=list)  # RoundLog | FleetRoundLog
     scheduler: Optional[Scheduler] = None
     fleet: object = None  # warm FleetScheduler session (balance_fleet)
+    exec_host_s: float = 0.0  # host wall spent simulating/serving in run*()
 
     @property
     def num_procs(self) -> int:
         return self.num_replicas
 
     def run(self, d: Sequence[int]) -> List[float]:
+        t0 = time.perf_counter()
         times = [
             self.replica_run(i, int(x)) if x > 0 else 0.0 for i, x in enumerate(d)
         ]
+        self.exec_host_s += time.perf_counter() - t0
         self.logs.append(RoundLog(list(map(int, d)), times, max(times)))
         return times
 
     def run_jobs(self, names: Sequence[str], D):
         """FleetExecutor protocol: one multi-tenant round — every measuring
         tenant's chunks on every replica (time-sliced per replica, so each
-        (tenant, replica) cell is an independent ``replica_run`` call)."""
+        (tenant, replica) cell is an independent ``replica_run`` call).
+
+        Logs ONE :class:`FleetRoundLog` for the round, costed time-sliced:
+        the round's wall-clock is the busiest replica's SUM across tenants
+        (each replica serves its tenants' slices back to back), with the
+        per-tenant slice times kept on the log.  One ``RoundLog`` per tenant
+        at ``max(times)`` each — the previous accounting — under-reported
+        the round by up to q×."""
         import numpy as np
 
+        t0 = time.perf_counter()
         out = []
         for k, _name in enumerate(names):
-            d = [int(v) for v in D[k]]
-            times = self.run(d)
-            out.append(times)
-        return np.asarray(out, dtype=np.float64)
+            out.append(
+                [
+                    self.replica_run(i, int(x)) if x > 0 else 0.0
+                    for i, x in enumerate(D[k])
+                ]
+            )
+        self.exec_host_s += time.perf_counter() - t0
+        T = np.asarray(out, dtype=np.float64)
+        busy = T.sum(axis=0) if len(out) else np.zeros(self.num_replicas)
+        self.logs.append(
+            FleetRoundLog(
+                names=[str(nm) for nm in names],
+                D=[[int(v) for v in row] for row in D],
+                times=[[float(v) for v in row] for row in T],
+                proc_busy=[float(v) for v in busy],
+                wall_cost=float(busy.max()) if len(out) else 0.0,
+            )
+        )
+        return T
 
     def round_cost(self, times: Sequence[float]) -> float:
         return max(times)
@@ -129,31 +185,85 @@ class ReplicaDispatcher:
         registry=None,
         device_classes: Optional[Sequence[str]] = None,
         workloads: Optional[Dict[str, str]] = None,
+        reserve_knots: Optional[int] = None,
+        quantize: Optional[float] = None,
+        staleness_tol: Optional[float] = None,
         **kw,
     ) -> Dict[str, Partition]:
         """Balance every tenant's chunk stream concurrently: ``tenants``
         maps tenant name -> its chunk count ``n``; returns tenant ->
         ``Partition``.  One ``FleetScheduler`` round serves all tenants
         (see the class docstring); extra ``kw`` become per-job ``JobSpec``
-        fields (``min_units``, ``max_iter``, ...)."""
+        fields (``min_units``, ``max_iter``, ...).
+
+        Repeated calls REUSE the warm session on ``self.fleet`` whenever it
+        is compatible (same backend, same replica count): absent tenants are
+        retired, present ones resized to the requested ``n`` (keeping their
+        learned estimates — the re-run warm-starts from a repartition), new
+        ones admitted.  The compiled stacked programs and per-lane caches
+        survive, so a steady-state re-balance triggers ZERO new
+        compilations.  Only a backend or replica-count change pays a fresh
+        session — and when a registry is attached, the old session's learned
+        profiles are checkpointed into it first so the fresh session
+        warm-starts instead of re-probing cold."""
         from ..fleet import FleetScheduler, JobSpec
 
-        self.fleet = FleetScheduler(
-            self.num_replicas,
-            backend=backend,
-            registry=registry,
-            device_classes=device_classes,
-            alpha=0.0,
-            beta=0.0,
+        fleet = self.fleet
+        warm = (
+            fleet is not None
+            and getattr(fleet, "num_procs", None) == self.num_replicas
+            and getattr(fleet, "backend", None) == backend
         )
-        for name, n in tenants.items():
-            self.fleet.admit(
-                JobSpec(
-                    name=name,
-                    n=int(n),
-                    eps=self.eps,
-                    workload=(workloads or {}).get(name),
-                    **kw,
-                )
+        if not warm:
+            if fleet is not None:
+                # carry what the incompatible session learned across
+                reg = registry if registry is not None else fleet.registry
+                if reg is not None and fleet.device_classes is not None:
+                    fleet.save_profiles(reg)
+            self.fleet = fleet = FleetScheduler(
+                self.num_replicas,
+                backend=backend,
+                registry=registry,
+                device_classes=device_classes,
+                alpha=0.0,
+                beta=0.0,
+                reserve_knots=reserve_knots,
+                quantize=quantize if quantize is not None else 0.0,
+                staleness_tol=staleness_tol,
             )
-        return self.fleet.run(self)
+        else:
+            if quantize is not None:
+                fleet.quantize = float(quantize)
+            if staleness_tol is not None:
+                fleet.staleness_tol = float(staleness_tol)
+            if registry is not None:
+                fleet.registry = registry
+            if device_classes is not None:
+                if len(device_classes) != self.num_replicas:
+                    raise ValueError("device_classes length != num_replicas")
+                fleet.device_classes = [str(c) for c in device_classes]
+        current = set(fleet.jobs)
+        for name in current - set(tenants):
+            fleet.retire(name)
+        resize_kw = {
+            k: kw[k]
+            for k in ("caps", "min_units", "max_iter", "probe_budget")
+            if k in kw
+        }
+        for name, n in tenants.items():
+            if name in current:
+                # unconditional: reset the loop state so run() re-converges
+                # this tenant from its learned estimates (bit-identical to a
+                # fresh session admitted with the same models)
+                fleet.resize(name, n=int(n), eps=self.eps, **resize_kw)
+            else:
+                fleet.admit(
+                    JobSpec(
+                        name=name,
+                        n=int(n),
+                        eps=self.eps,
+                        workload=(workloads or {}).get(name),
+                        **kw,
+                    )
+                )
+        return fleet.run(self)

@@ -41,8 +41,34 @@ class StragglerDetector:
     patience: int = 3  # consecutive strikes before REPROFILE
     patience_hard: int = 6  # consecutive strikes before QUARANTINE
 
+    # Both maps are keyed by the CURRENT group index space.  When the group
+    # set changes (``Scheduler.resize``/``join``/``leave``), the detector
+    # must be remapped through :meth:`remap` — carrying it across a resize
+    # unmapped makes every survivor inherit its departed neighbour's strike
+    # count and can falsely quarantine a healthy group.
     strikes: Dict[int, int] = field(default_factory=dict)
     history: List[tuple] = field(default_factory=list)
+
+    def remap(self, surviving: Sequence[int], joined: int = 0) -> "StragglerDetector":
+        """New detector for a resized group set: survivor ``surviving[j]``
+        keeps its strike count under its new index ``j``, departed groups'
+        strikes are dropped, and ``joined`` newcomers start clean.
+        ``history`` rows are remapped the same way (departed groups' rows
+        dropped) so post-resize forensics read in the new index space."""
+        new_of = {int(old): new for new, old in enumerate(surviving)}
+        det = StragglerDetector(
+            factor=self.factor,
+            factor_hard=self.factor_hard,
+            patience=self.patience,
+            patience_hard=self.patience_hard,
+        )
+        det.strikes = {
+            new_of[g]: s for g, s in self.strikes.items() if g in new_of
+        }
+        det.history = [
+            (new_of[row[0]], *row[1:]) for row in self.history if row[0] in new_of
+        ]
+        return det
 
     def update(
         self,

@@ -133,6 +133,47 @@ def test_straggler_healthy_group_resets_strikes():
     assert det.strikes[0] == 0
 
 
+def test_straggler_remap_drops_departed_strikes():
+    det = StragglerDetector(factor=1.5, patience=3, patience_hard=6)
+    det.strikes = {0: 5, 2: 2}
+    det.history = [(0, 10, 1.0, 2.0, 2.0), (1, 12, 1.0, 1.0, 1.0)]
+    new = det.remap([1, 2], joined=1)
+    # old group 2 keeps its count under new index 1; departed 0's drop;
+    # the joiner (new index 2) starts clean
+    assert new.strikes == {1: 2}
+    # history rows remapped into the new index space (departed rows gone)
+    assert new.history == [(0, 12, 1.0, 1.0, 1.0)]
+    assert (new.factor, new.patience, new.patience_hard) == (1.5, 3, 6)
+
+
+def test_leave_does_not_inherit_neighbour_strikes():
+    """Regression: a group one mild strike away from quarantine leaves; the
+    survivor shifted into its index must NOT quarantine on its own next mild
+    strike.  Before the fix, Scheduler.resize() handed the detector through
+    unmapped, so every survivor inherited its departed left-neighbour's
+    strike count."""
+    from repro.core.scheduler import Scheduler
+    from repro.runtime.straggler import StragglerAction
+
+    det = StragglerDetector(factor=1.5, patience=3, patience_hard=6)
+    sched = Scheduler(
+        n_units=60, num_groups=3, eps=0.05, min_units=1, smooth=1.0,
+        detector=det,
+    )
+    for _ in range(8):
+        times = [d / s if d > 0 else 0.0 for d, s in zip(sched.d, [1.0, 2.0, 3.0])]
+        sched.observe(times)
+    sched.detector.strikes = {0: 5}  # group 0: one mild strike from quarantine
+    sched.leave(0)
+    assert sched.detector.strikes == {}  # departed strikes dropped
+    # the survivor formerly at index 1 (now 0) takes one mild strike: it
+    # must count as a FIRST strike, not a sixth
+    healthy = [m.time(float(d)) for m, d in zip(sched.models, sched.d)]
+    acts = sched.straggler_actions([healthy[0] * 1.6, healthy[1]])
+    assert acts[0] is StragglerAction.NONE
+    assert sched.detector.strikes[0] == 1
+
+
 def test_straggler_reprofile_clears_model():
     ctrl = BalanceController(n_units=40, num_groups=2, eps=0.05, smooth=1.0)
     ctrl.observe([2.0, 1.0])
@@ -177,3 +218,36 @@ def test_elastic_then_converges_quickly():
     changes = _simulate(new, [1.0, 3.0], steps=6)
     times = [d / s for d, s in zip(new.d, [1.0, 3.0])]
     assert (max(times) - min(times)) / min(times) <= 0.25
+
+
+# ---------------------------------------------------------------------------
+# Fleet round accounting (ReplicaDispatcher.run_jobs)
+# ---------------------------------------------------------------------------
+
+
+def test_run_jobs_logs_one_time_sliced_round():
+    """Regression: one multi-tenant round must log ONE FleetRoundLog costed
+    time-sliced — the busiest replica's SUM across tenants — checked against
+    a hand-computed 2-tenant / 2-replica case.  The old accounting appended
+    one RoundLog per tenant at max(times) each, under-reporting the round's
+    wall-clock (max(3,3)=3 where the busiest replica actually takes 5)."""
+    from repro.core.executor import FleetRoundLog
+    from repro.runtime.serve_loop import ReplicaDispatcher
+
+    speeds = [2.0, 4.0]
+    disp = ReplicaDispatcher(
+        replica_run=lambda i, x: float(x) / speeds[i], num_replicas=2
+    )
+    T = disp.run_jobs(["a", "b"], [[4, 12], [6, 0]])
+    # hand-computed cells: a -> [4/2, 12/4] = [2, 3]; b -> [6/2, 0] = [3, 0]
+    assert [[float(v) for v in row] for row in T] == [[2.0, 3.0], [3.0, 0.0]]
+    assert len(disp.logs) == 1
+    log = disp.logs[0]
+    assert isinstance(log, FleetRoundLog)
+    assert log.names == ["a", "b"]
+    assert log.D == [[4, 12], [6, 0]]
+    assert log.times == [[2.0, 3.0], [3.0, 0.0]]
+    # replica busy = column sums across tenants; the round's wall-clock is
+    # the busiest replica, NOT any single tenant's max
+    assert log.proc_busy == [5.0, 3.0]
+    assert log.wall_cost == 5.0

@@ -1,0 +1,215 @@
+"""Serving-path tests over the traffic-trace harness (benchmarks/serve_trace).
+
+Locks the three serving-path behaviors this harness was built to expose:
+trace determinism under a fixed seed, straggler reaction on the RIGHT
+replica before AND after a fleet resize, and balance_fleet warm-session
+reuse (bit-identical to a fresh session admitted with the same models, with
+zero new compilations).
+"""
+
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "benchmarks"))
+
+import serve_trace as st  # noqa: E402
+
+from repro.fleet import ProfileRegistry  # noqa: E402
+from repro.runtime.serve_loop import ReplicaDispatcher  # noqa: E402
+from repro.runtime.straggler import StragglerAction  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# trace determinism
+# ---------------------------------------------------------------------------
+
+
+def test_trace_deterministic_under_fixed_seed():
+    cfg = st.QUICK
+    t1, t2 = st.build_trace(cfg), st.build_trace(cfg)
+    assert t1 == t2
+    assert st.build_trace(replace(cfg, seed=cfg.seed + 1)) != t1
+
+
+def test_trace_has_flash_crowd_and_admit_segments():
+    cfg = st.QUICK
+    trace = st.build_trace(cfg)
+    assert len(trace) == cfg.epochs
+    name, f0, f1, mult = cfg.flash
+    inside = np.mean([trace[e][name] for e in range(f0, f1)])
+    outside = np.mean(
+        [trace[e][name] for e in range(cfg.epochs) if not f0 <= e < f1]
+    )
+    assert inside > 1.5 * outside  # the flash crowd is visible in the trace
+    aname, _, a0, a1 = cfg.admit
+    assert all(aname in trace[e] for e in range(a0, a1))
+    assert all(aname not in trace[e] for e in range(a0))
+
+
+def test_world_speeds_deterministic():
+    cfg = st.QUICK
+    w1 = st.world_with_joiner(cfg, st.build_world(cfg))
+    w2 = st.world_with_joiner(cfg, st.build_world(cfg))
+    rids = [r.rid for r in w1.replicas]
+    for e in (0, 10, cfg.straggler[1] + 3):
+        assert np.array_equal(w1.speeds(rids, e), w2.speeds(rids, e))
+
+
+# ---------------------------------------------------------------------------
+# straggler reaction: right replica, before AND after a resize
+# ---------------------------------------------------------------------------
+
+
+def _serve_epoch(disp, tenants, speeds):
+    """One steady serving epoch: rebalance -> simulate -> scan -> fold."""
+    fleet = disp.fleet
+    ds = fleet.rebalance(dict(tenants))
+    times = {
+        name: [d / s if d > 0 else 0.0 for d, s in zip(dvec, speeds)]
+        for name, dvec in ds.items()
+    }
+    acts = fleet.straggler_actions(times)  # scan BEFORE fold
+    fleet.observe(times)
+    return acts
+
+
+def _decay_until(disp, tenants, base_speeds, lane, action, max_epochs=10):
+    """Throttle ``lane`` with a runaway x0.5/epoch decay until ``action``
+    fires; returns (epochs_taken, set of OTHER lanes any action fired on)."""
+    others = set()
+    for k in range(max_epochs):
+        speeds = list(base_speeds)
+        speeds[lane] = base_speeds[lane] * 0.5 ** (k + 1)
+        acts = _serve_epoch(disp, tenants, speeds)
+        for i, a in enumerate(acts):
+            if a is not StragglerAction.NONE and i != lane:
+                others.add(i)
+        if acts[lane] is action:
+            return k + 1, others
+    return None, others
+
+
+def test_straggler_reaction_right_replica_before_and_after_resize():
+    tenants = {"t": 400}
+    speeds = [8.0, 8.0, 4.0, 4.0]
+    disp = ReplicaDispatcher(
+        replica_run=lambda i, x: 0.0, num_replicas=4, eps=0.08
+    )
+    disp.replica_run = lambda i, x: x / speeds[i]
+    disp.balance_fleet(
+        tenants, reserve_knots=16, quantize=0.05, min_units=1, max_iter=12
+    )
+    for _ in range(3):  # healthy steady epochs: no strikes anywhere
+        acts = _serve_epoch(disp, tenants, speeds)
+        assert all(a is StragglerAction.NONE for a in acts)
+
+    # BEFORE resize: runaway decay on replica 2 -> REPROFILE on replica 2,
+    # within the detector's patience, and on NO other replica
+    n, others = _decay_until(
+        disp, tenants, speeds, lane=2, action=StragglerAction.REPROFILE
+    )
+    assert n is not None and n <= disp.fleet.detector.patience
+    assert others == set()
+
+    # resize: replica 2 leaves (quarantine path) -> fresh 3-replica session;
+    # strikes must follow the survivors (detector remap)
+    old_fleet = disp.fleet
+    survivors = [0, 1, 3]
+    speeds3 = [speeds[i] for i in survivors]
+    disp.num_replicas = 3
+    disp.replica_run = lambda i, x: x / speeds3[i]
+    disp.balance_fleet(
+        tenants, reserve_knots=16, quantize=0.05, min_units=1, max_iter=12
+    )
+    assert disp.fleet is not old_fleet  # replica-count change -> fresh
+    disp.fleet.detector = old_fleet.detector.remap(survivors)
+
+    # AFTER resize: decay the replica formerly at index 3 (now index 2) ->
+    # the reaction must land on the SHIFTED index, nowhere else
+    n, others = _decay_until(
+        disp, tenants, speeds3, lane=2, action=StragglerAction.REPROFILE
+    )
+    assert n is not None and n <= disp.fleet.detector.patience
+    assert others == set()
+
+
+# ---------------------------------------------------------------------------
+# balance_fleet warm reuse: bit-identical, zero new compilations
+# ---------------------------------------------------------------------------
+
+
+def test_balance_fleet_warm_reuse_parity_and_no_recompile():
+    import repro.core.modelbank_jax as mbj
+
+    speeds = [4.0, 2.0, 1.0]
+    tenants = {"a": 300, "b": 120}
+    # distinct per-replica classes and per-tenant workloads: registry
+    # profiles stay per-(replica, tenant), so a fresh session warm-starts
+    # from EXACTLY the models the warm session resumes from
+    kw = dict(
+        device_classes=["c0", "c1", "c2"],
+        workloads={"a": "wa", "b": "wb"},
+        reserve_knots=16,
+        quantize=0.05,
+        min_units=1,
+        max_iter=10,
+    )
+    disp = ReplicaDispatcher(
+        replica_run=lambda i, x: x / speeds[i], num_replicas=3, eps=0.08
+    )
+    disp.balance_fleet(tenants, registry=ProfileRegistry(), **kw)
+
+    fleet0 = disp.fleet
+    caches0 = (
+        mbj._partition_units_jit._cache_size(),
+        mbj._fold_in_jit._cache_size(),
+    )
+    restacks0 = fleet0.restacks
+    res_warm = disp.balance_fleet(tenants, registry=ProfileRegistry(), **kw)
+
+    # warm session reused: same object, no restack, ZERO new compilations
+    assert disp.fleet is fleet0
+    assert fleet0.restacks == restacks0
+    assert mbj._partition_units_jit._cache_size() == caches0[0]
+    assert mbj._fold_in_jit._cache_size() == caches0[1]
+
+    # bit-identical to a fresh session admitted with the same models
+    # (checkpointed through the registry)
+    reg = ProfileRegistry()
+    disp.fleet.save_profiles(reg)
+    disp2 = ReplicaDispatcher(
+        replica_run=lambda i, x: x / speeds[i], num_replicas=3, eps=0.08
+    )
+    res_fresh = disp2.balance_fleet(tenants, registry=reg, **kw)
+    assert disp2.fleet is not fleet0
+    for name in tenants:
+        assert res_warm[name].allocations == res_fresh[name].allocations
+
+
+def test_balance_fleet_admit_retire_rides_warm_session():
+    speeds = [4.0, 2.0, 1.0]
+    disp = ReplicaDispatcher(
+        replica_run=lambda i, x: x / speeds[i], num_replicas=3, eps=0.08
+    )
+    disp.balance_fleet({"a": 300}, reserve_knots=16, min_units=1, max_iter=10)
+    fleet0 = disp.fleet
+    # admit a new tenant + retire nothing: same session
+    res = disp.balance_fleet(
+        {"a": 300, "b": 120}, reserve_knots=16, min_units=1, max_iter=10
+    )
+    assert disp.fleet is fleet0
+    assert set(res) == {"a", "b"}
+    assert set(fleet0.jobs) == {"a", "b"}
+    # retire one: still the same session
+    disp.balance_fleet({"b": 120}, reserve_knots=16, min_units=1, max_iter=10)
+    assert disp.fleet is fleet0
+    assert set(fleet0.jobs) == {"b"}
+    # a replica-count change is the ONLY fresh-session trigger here
+    disp.num_replicas = 2
+    disp.replica_run = lambda i, x: x / speeds[i]
+    disp.balance_fleet({"b": 120}, reserve_knots=16, min_units=1, max_iter=10)
+    assert disp.fleet is not fleet0
