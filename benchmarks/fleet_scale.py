@@ -48,7 +48,10 @@ Acceptance gates (exit 1):
     folded estimates), plus the dispatch-ratio gate at q=8, PLUS the
     hierarchical consistency gate: a single-group hier fleet reproduces
     the flat fleet bit-for-bit and a multi-group hier fleet converges to a
-    makespan within 5% of flat.
+    makespan within 5% of flat, PLUS the lane-bucket gate: a
+    ``lane_buckets=True`` fleet stays bit-identical to an unbucketed one
+    and an admit within a power-of-two bucket reuses both compiled device
+    programs (zero recompiles).
 
 Results are written to ``BENCH_fleet.json``.
 
@@ -331,6 +334,66 @@ def hier_parity_gate(q=4, p=100, seed=23) -> bool:
     return ok
 
 
+def bucket_gate(p=50, seed=41) -> bool:
+    """Lane-bucket contract (the CI smoke): with ``lane_buckets=True`` the
+    jax stack is padded to the next power-of-two lane count with masked
+    dead lanes, so (a) allocations stay bit-identical to the unbucketed
+    fleet, and (b) admitting a tenant WITHIN the bucket reuses both
+    compiled device programs — zero recompiles across the admit."""
+    from repro.core import modelbank_jax as mbj
+
+    _, warm, _, _ = make_tenants(4, p, seed=seed)
+    ns = [100 * p + 7 * j for j in range(4)]
+    names = [f"t{j}" for j in range(4)]
+
+    def mk(buckets):
+        fl = FleetScheduler(p, backend="jax", reserve_knots=16,
+                            lane_buckets=buckets)
+        for j in range(3):
+            fl.admit(JobSpec(name=names[j], n=ns[j], eps=1e-12, min_units=1),
+                     models=warm[j])
+        return fl
+
+    plain, bucketed = mk(False), mk(True)
+    ok = True
+    if plain.rebalance() != bucketed.rebalance():
+        print("BUCKET FAIL: bucketed fleet diverges from plain at q=3")
+        ok = False
+    if int(bucketed._stacked.counts.shape[0]) != 4:
+        print("BUCKET FAIL: q=3 stack not padded to 4 lanes")
+        ok = False
+
+    # Warm BOTH device programs at the padded shape before taking the
+    # cache baseline — the fold program only compiles on first observe.
+    obs = {names[0]: [0.1 * (i + 1) for i in range(p)]}
+    bucketed.observe(obs)
+    bucketed.rebalance()
+    c0 = mbj._partition_units_jit._cache_size()
+    f0 = mbj._fold_in_jit._cache_size()
+    bucketed.admit(JobSpec(name=names[3], n=ns[3], eps=1e-12, min_units=1),
+                   models=warm[3])
+    ds = bucketed.rebalance()
+    bucketed.observe({names[3]: [0.1 * (i + 1) for i in range(p)]})
+    dc = mbj._partition_units_jit._cache_size() - c0
+    df = mbj._fold_in_jit._cache_size() - f0
+    if dc or df:
+        print(f"BUCKET FAIL: admit within the 4-lane bucket recompiled "
+              f"(partition +{dc}, fold +{df})")
+        ok = False
+    if sum(ds[names[3]]) != ns[3]:
+        print("BUCKET FAIL: padded-lane allocations do not sum to n")
+        ok = False
+
+    # Parity must survive the admit too (plain replays the same fold).
+    plain.observe(obs)
+    plain.admit(JobSpec(name=names[3], n=ns[3], eps=1e-12, min_units=1),
+                models=warm[3])
+    if plain.rebalance() != ds:
+        print("BUCKET FAIL: bucketed fleet diverges from plain after admit")
+        ok = False
+    return ok
+
+
 _COLDSTART_WORKER = r"""
 import sys, time
 t0 = time.perf_counter()
@@ -470,6 +533,11 @@ def main(argv=None) -> int:
     hier_ok = hier_parity_gate()
     print("hier consistency:", "OK" if hier_ok else "FAIL")
 
+    print("lane-bucket gate (q=3->4 lanes, p=50, zero recompiles) ...",
+          flush=True)
+    bucket_ok = bucket_gate()
+    print("lane buckets:", "OK" if bucket_ok else "FAIL")
+
     payload = {
         "benchmark": "fleet_scale",
         "description": (
@@ -492,6 +560,7 @@ def main(argv=None) -> int:
         "rounds_timed": rounds,
         "parity_q8_p100": parity_ok,
         "hier_parity_q4_p100": hier_ok,
+        "bucket_q3_p50": bucket_ok,
         "sweep": rows,
     }
     if coldstart is not None:
@@ -505,6 +574,10 @@ def main(argv=None) -> int:
         rc = 1
     if not hier_ok:
         print("FAIL: hierarchical route diverges from flat at q=4, p=100")
+        rc = 1
+    if not bucket_ok:
+        print("FAIL: lane buckets diverge from plain or recompile within "
+              "a bucket at q=3->4, p=50")
         rc = 1
     for row in rows:
         if row.get("hier"):

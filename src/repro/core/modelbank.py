@@ -89,6 +89,26 @@ kernel); multiple groups agree with the flat makespan to within the
 interpolation error of the aggregate (fuzz-locked in
 ``tests/test_hierarchy.py``).
 
+Time and energy, one bank layout
+--------------------------------
+
+The bi-objective extension (``core/energy.py``; ROADMAP direction 4) does
+not add a fourth backend — it adds a SECOND bank in the same layout.  An
+optional ``energy`` sub-bank (``es[p, k]``, attached with
+:meth:`ModelBank.with_energy` / built by ``SpeedStore.attach_energy``)
+stores per-processor *energy-rate* functions ``er_i(x) = x / E_i(x)``, so
+``energy.time(x)`` IS the energy ``E_i(x)`` and every mechanism above —
+padded layout, fold-in, stacking, monotone flags, the jitted ``t*``
+bisection and threshold-count completion — serves the energy objective
+verbatim.  ``energy_at(d)`` / ``fleet_energy(d)`` evaluate per-processor
+and total energies of a distribution; ``objective="energy"`` partitions
+run the SAME geometric kernel on the energy sub-bank (balancing
+per-processor energies), and the makespan/energy Pareto front is a batched
+sweep of time-threshold bisections — tightened caps
+``min(cap_i, floor(alloc_time_i(t)))`` feeding stacked ``[T, p, k]``
+energy solves (``energy.pareto_front``), numpy/jax bit-identical under the
+same fuzz-parity regime as speed (``tests/test_energy.py``).
+
 The fleet layer stacks the jax backend one level higher: q concurrent
 jobs' banks live in ONE ``[q, p, k]`` ``JaxModelBank`` owned by
 ``repro.fleet.FleetScheduler`` (per-job ``n``/caps/``min_units`` and
@@ -179,6 +199,9 @@ legacy                                                  facade
                                                         ``sched.leave(g)``
 ``StragglerDetector`` wiring + ``det.reprofile``        ``sched.straggler_actions(times)`` (auto-reprofiles)
 ``ctrl.state_dict()`` (lost backend/smooth)             ``sched.state_dict()`` (full config round-trips)
+(no energy objective)                                   ``sched.partition(n, objective="time"|"energy"``
+                                                        ``    |"pareto", energy_cap=...)`` after
+                                                        ``sched.attach_energy(energy_models)``
 ======================================================  =====================================================
 
 Results are a typed ``Partition`` (allocations, ``t_star``, makespan,
@@ -231,6 +254,10 @@ class ModelBank:
     # Host-side monotone-time flag (None = unknown, computed lazily by
     # is_monotone()); routes the threshold-count integer completion.
     monotone: Optional[bool] = None
+    # Optional energy sub-bank (same layout; ss holds energy RATES x/E(x),
+    # so energy.time(x) == E(x)) — see the "time and energy" docstring
+    # section and core/energy.py.
+    energy: Optional["ModelBank"] = None
 
     # -- construction --------------------------------------------------------
 
@@ -426,19 +453,47 @@ class ModelBank:
             return 0.0
         return x / self.speed_one(i, x)
 
+    # -- the energy sub-bank (core/energy.py) --------------------------------
+
+    def with_energy(self, energy: "ModelBank") -> "ModelBank":
+        """Attach an energy sub-bank (same ``p``; ``ss`` holds energy rates
+        ``x / E(x)``) — returns a new bank sharing this bank's arrays."""
+        if energy.p != self.p:
+            raise ValueError(
+                f"energy bank has {energy.p} rows but speed bank has {self.p}"
+            )
+        return ModelBank(
+            xs=self.xs, ss=self.ss, counts=self.counts,
+            monotone=self.monotone, energy=energy,
+        )
+
+    def energy_at(self, d: ArrayLike) -> np.ndarray:
+        """Per-processor energies ``E_i(d_i)`` of a distribution (0 for
+        ``d_i <= 0``, NaN on empty energy rows with units)."""
+        if self.energy is None:
+            raise ValueError("no energy sub-bank attached (use with_energy)")
+        return self.energy.time(d)
+
+    def fleet_energy(self, d: ArrayLike) -> float:
+        """Total fleet energy ``sum_i E_i(d_i)`` of a distribution."""
+        return float(self.energy_at(d).sum())
+
     # -- transformations -----------------------------------------------------
 
     def scaled(self, speed_scale: ArrayLike) -> "ModelBank":
         """New bank with every row's speeds multiplied by ``speed_scale[i]``
         (the 2-D partitioner's column-width rescaling, batched).  A uniform
         positive per-row scale preserves time-monotonicity, so the cached
-        flag carries over; any other scale resets it to unknown."""
+        flag carries over; any other scale resets it to unknown.  The energy
+        sub-bank (problem-size semantics unchanged by a speed rescale)
+        carries through untouched."""
         scale = np.broadcast_to(np.asarray(speed_scale, dtype=np.float64), (self.p,))
         return ModelBank(
             xs=self.xs.copy(),
             ss=self.ss * scale[:, None],
             counts=self.counts.copy(),
             monotone=self.monotone if bool(np.all(scale > 0.0)) else None,
+            energy=self.energy,
         )
 
     # -- adapters back to the scalar protocol --------------------------------

@@ -687,6 +687,10 @@ class JaxModelBank:
     # adversarial column demotes only itself while the rest keep the
     # threshold-count bulk grant — in the same device program.
     monotone_cols: Optional[np.ndarray] = None
+    # Optional energy sub-bank (same layout; ss holds energy RATES x/E(x),
+    # so energy.time(x) == E(x)) — see the "time and energy" section in
+    # modelbank.py and core/energy.py.
+    energy: Optional["JaxModelBank"] = None
 
     is_jax = True  # duck-type marker for the partition.py dispatcher
 
@@ -707,6 +711,11 @@ class JaxModelBank:
             # resolve on the host while the arrays are still numpy — one
             # O(p k) pass, so stacked/2-D paths never pay a device check
             monotone=bank.is_monotone(),
+            energy=(
+                cls.from_bank(bank.energy, dtype=dtype)
+                if bank.energy is not None
+                else None
+            ),
         )
 
     @classmethod
@@ -744,7 +753,13 @@ class JaxModelBank:
             k = max(k, int(min_k))
         padded = [b._padded_to(k) for b in banks]
         flags = [b.monotone for b in banks]
+        energy = (
+            cls.stack([b.energy for b in banks], min_k=min_k)
+            if banks and all(b.energy is not None for b in banks)
+            else None
+        )
         return cls(
+            energy=energy,
             xs=jnp.stack([px for px, _ in padded]),
             ss=jnp.stack([ps for _, ps in padded]),
             counts=jnp.stack([b.counts for b in banks]),
@@ -791,6 +806,7 @@ class JaxModelBank:
             ss=np.asarray(self.ss, dtype=np.float64),
             counts=np.asarray(self.counts, dtype=np.int64),
             monotone=self.monotone,
+            energy=self.energy.to_bank() if self.energy is not None else None,
         )
 
     # -- shape ---------------------------------------------------------------
@@ -841,6 +857,7 @@ class JaxModelBank:
             # positive per-row scaling preserves time-monotonicity
             monotone=self.monotone if positive else None,
             monotone_cols=self.monotone_cols if positive else None,
+            energy=self.energy,  # problem-size semantics unchanged
         )
 
     def copy(self) -> "JaxModelBank":
@@ -852,7 +869,37 @@ class JaxModelBank:
             counts=jnp.array(self.counts), max_count=self.max_count,
             empty_rows=self.empty_rows, monotone=self.monotone,
             monotone_cols=self.monotone_cols,
+            energy=self.energy.copy() if self.energy is not None else None,
         )
+
+    # -- the energy sub-bank (core/energy.py) --------------------------------
+
+    def with_energy(self, energy: "JaxModelBank") -> "JaxModelBank":
+        """Attach an energy sub-bank (same shape; ``ss`` holds energy rates
+        ``x / E(x)``) — returns a new bank sharing this bank's buffers."""
+        if energy.counts.shape != self.counts.shape:
+            raise ValueError(
+                f"energy bank shape {energy.counts.shape} != speed bank "
+                f"shape {self.counts.shape}"
+            )
+        return JaxModelBank(
+            xs=self.xs, ss=self.ss, counts=self.counts,
+            max_count=self.max_count, empty_rows=self.empty_rows,
+            monotone=self.monotone, monotone_cols=self.monotone_cols,
+            energy=energy,
+        )
+
+    def energy_at(self, d) -> jnp.ndarray:
+        """Per-processor energies ``E_i(d_i)`` of a distribution (0 for
+        ``d_i <= 0``, NaN on empty energy rows with units)."""
+        if self.energy is None:
+            raise ValueError("no energy sub-bank attached (use with_energy)")
+        return self.energy.time(d)
+
+    def fleet_energy(self, d) -> float:
+        """Total fleet energy ``sum_i E_i(d_i)`` of a distribution (host
+        scalar; one reduction + sync)."""
+        return float(self.energy_at(d).sum())
 
     def _max_count_bound(self) -> int:
         """Host-side upper bound on ``counts.max()`` (syncs once if unknown,
@@ -1072,4 +1119,7 @@ class JaxModelBank:
             # a monotonicity violation; the flag is re-resolved lazily by
             # is_monotone() on the next partition (one device reduction).
             monotone=None,
+            # Speed observations don't touch the energy sub-bank; fold
+            # energy observations into it directly (it is a bank).
+            energy=self.energy,
         )

@@ -355,13 +355,29 @@ class Scheduler:
         min_units: Optional[int] = None,
         *,
         eps: Optional[float] = None,
+        persist_caps: bool = False,
+        objective: str = "time",
+        energy_cap: Optional[float] = None,
     ) -> Partition:
         """Compute one optimal distribution from the current models.
 
         In grid mode pass ``n=(M, N)`` (or call :meth:`partition_grid`).
         Updates the scheduler's current distribution ``d``.
+
+        Per-call ``caps`` apply to THIS call only; they no longer overwrite
+        the session caps used by every later ``repartition``/``observe``/
+        ``autotune``.  Pass ``persist_caps=True`` to opt back into the old
+        sticky behaviour.
+
+        ``objective``/``energy_cap`` route the bi-objective dispatch (see
+        ``core/energy.py``; call :meth:`attach_energy` first): ``"energy"``
+        balances per-processor energy, ``"pareto"`` picks the knee of the
+        makespan/energy front — or, with ``energy_cap``, the fastest point
+        within the budget.  Not supported in grid or hierarchical mode.
         """
         if self.grid is not None:
+            if objective != "time" or energy_cap is not None:
+                raise ValueError("grid scheduler: objective='time' only")
             if isinstance(n, (tuple, list)) and len(n) == 2:
                 return self.partition_grid(int(n[0]), int(n[1]), eps=eps)
             raise ValueError("grid scheduler: pass n=(M, N) or call partition_grid()")
@@ -371,17 +387,46 @@ class Scheduler:
             raise ValueError("no unit count: pass n or construct with n_units")
         n = int(n)
         self.n_units = n
+        caps_now = self.caps
         if caps is not None:
-            self.caps = list(caps)
+            caps_now = list(caps)
+            if persist_caps:
+                self.caps = list(caps)
         mu = self.min_units if min_units is None else int(min_units)
         if self.groups is not None:
-            d, t_star = self._hier_partition(n, self.caps, mu)
+            if objective != "time" or energy_cap is not None:
+                raise ValueError("hierarchical scheduler: objective='time' only")
+            d, t_star = self._hier_partition(n, caps_now, mu)
         else:
             d, t_star = self.store.partition(
-                n, self.caps, min_units=mu, completion=self._completion_for(self.store)
+                n, caps_now, min_units=mu,
+                completion=self._completion_for(self.store),
+                objective=objective, energy_cap=energy_cap,
             )
         self.d = list(d)
         return self._flat_result(d, t_star, eps=self.eps if eps is None else eps)
+
+    def attach_energy(self, models: Sequence) -> "Scheduler":
+        """Attach per-processor energy models (``E_i(x)`` via energy-rate
+        FPMs — see ``core/energy.py:energy_model``) enabling the
+        ``objective=``/``energy_cap=`` dispatch and :meth:`pareto_front`."""
+        self.store.attach_energy(models)
+        return self
+
+    def pareto_front(self, n: Optional[int] = None, caps=None, *,
+                     min_units: Optional[int] = None, num_points: int = 17):
+        """The makespan/total-energy Pareto front for ``n`` units (energy
+        models must be attached).  Does not update ``d``."""
+        if n is None:
+            n = self.n_units
+        if n is None:
+            raise ValueError("no unit count: pass n or construct with n_units")
+        mu = self.min_units if min_units is None else int(min_units)
+        return self.store.pareto_front(
+            int(n), self.caps if caps is None else caps,
+            min_units=mu, num_points=num_points,
+            completion=self._completion_for(self.store),
+        )
 
     def repartition(self) -> Partition:
         """Force a re-partition from the current estimates (the facade's
@@ -1074,6 +1119,7 @@ class Scheduler:
         store_state = self.store.state_dict()
         return {
             "version": 1,
+            "energy_points": store_state.get("energy_points"),
             "policy": self.policy.value,
             "backend": self.backend,
             "n_units": self.n_units,
@@ -1125,6 +1171,10 @@ class Scheduler:
             **cfg,
         )
         sched.d = list(state.get("d", sched.d))
+        if state.get("energy_points"):
+            sched.store.attach_energy(
+                [PiecewiseLinearFPM.from_points(p) for p in state["energy_points"]]
+            )
         sched._ema = {(int(g), int(du)): float(v) for g, du, v in state.get("ema", [])}
         sched.rebalances = int(state.get("rebalances", 0))
         sched.steps_observed = int(state.get("steps_observed", 0))

@@ -53,6 +53,17 @@ sessions load fine (no timestamp -> treated as never refreshed, first in
 line for eviction), and older sessions ignore the extra field — the
 round-trip stays backward-compatible in both directions (``VERSION`` stays
 1).
+
+Energy profiles
+---------------
+
+Energy profiles ride alongside speed ones under the SAME key scheme:
+``record_energy``/``get_energy``/``warm_energy_models`` mirror the speed
+trio, storing energy-RATE points (``er_i(x) = x / E_i(x)`` — the
+representation of ``core/energy.py``, so the same positive/sorted
+validation applies).  Evicting or dropping a speed entry removes its
+energy sibling; persistence adds an OPTIONAL ``energy_entries`` list that
+older readers ignore (``VERSION`` still 1).
 """
 
 from __future__ import annotations
@@ -109,6 +120,8 @@ class ProfileRegistry:
             raise ValueError(f"max_entries must be >= 1 (got {max_entries})")
         self._entries: Dict[Tuple[str, str], List[Point]] = dict(entries or {})
         self._observed: Dict[Tuple[str, str], float] = {}
+        # energy-RATE point lists keyed like _entries (see module docstring)
+        self._energy: Dict[Tuple[str, str], List[Point]] = {}
         self.max_entries = int(max_entries) if max_entries is not None else None
         self._evict()
 
@@ -135,6 +148,7 @@ class ProfileRegistry:
             key = next(iter(self._entries))
             del self._entries[key]
             self._observed.pop(key, None)
+            self._energy.pop(key, None)
 
     def observed_at(self, device_class: str, workload: str) -> Optional[float]:
         """When this entry's points were last recorded (``record``'s ``now``),
@@ -146,6 +160,7 @@ class ProfileRegistry:
         first measured round contradicts).  True if something was dropped."""
         key = (str(device_class), str(workload))
         self._observed.pop(key, None)
+        self._energy.pop(key, None)
         return self._entries.pop(key, None) is not None
 
     def get(self, device_class: str, workload: str) -> Optional[List[Point]]:
@@ -186,6 +201,54 @@ class ProfileRegistry:
         self._observed[key] = float(now) if now is not None else time.time()
         self._evict()
 
+    # -- energy profiles (same keys, energy-rate points) ----------------------
+
+    def get_energy(self, device_class: str, workload: str) -> Optional[List[Point]]:
+        """The stored energy-rate points for one (class, workload) pair, or
+        None.  Malformed entries degrade exactly like :meth:`get`."""
+        key = (str(device_class), str(workload))
+        pts = self._energy.get(key)
+        if pts is None:
+            return None
+        ok = _valid_points(pts)
+        if ok is None:
+            warnings.warn(
+                f"energy profile entry ({device_class!r}, {workload!r}) is "
+                "malformed; ignoring it",
+                UserWarning,
+                stacklevel=2,
+            )
+            return None
+        return list(ok)
+
+    def record_energy(
+        self, device_class: str, workload: str, points: Sequence[Point]
+    ) -> None:
+        """Merge energy-rate points into the key's energy entry (duplicate
+        ``x`` replaces — freshest observation wins)."""
+        key = (str(device_class), str(workload))
+        merged = PiecewiseLinearFPM.from_points(self._energy.get(key, []))
+        for x, s in points:
+            merged.add_point(float(x), float(s))
+        self._energy[key] = [(float(x), float(s)) for x, s in merged.as_points()]
+
+    def warm_energy_models(
+        self, device_classes: Sequence[str], workload: Optional[str]
+    ) -> Optional[List[PiecewiseLinearFPM]]:
+        """One energy-rate model per processor, or None unless EVERY
+        processor's class has a valid energy entry (a partial energy bank
+        cannot price a fleet-wide cap, so it is all-or-nothing — unlike
+        speed warm starts, where a cold row just costs measurement rounds)."""
+        if workload is None:
+            return None
+        models = []
+        for cls_ in device_classes:
+            pts = self.get_energy(cls_, workload)
+            if not pts:
+                return None
+            models.append(PiecewiseLinearFPM.from_points(pts))
+        return models
+
     # -- the fleet-facing pair ------------------------------------------------
 
     def warm_models(
@@ -208,16 +271,24 @@ class ProfileRegistry:
         models: Sequence[PiecewiseLinearFPM],
         *,
         now: Optional[float] = None,
+        energy_models: Optional[Sequence[PiecewiseLinearFPM]] = None,
     ) -> None:
         """Fold a retiring job's learned estimates back in, processor by
         processor in index order (same-class processors merge into one
-        entry; deterministic, so a registry round-trip is reproducible)."""
+        entry; deterministic, so a registry round-trip is reproducible).
+        ``energy_models`` (energy-rate FPMs) ride along into the energy
+        entries when given."""
         if workload is None:
             return
         for cls_, m in zip(device_classes, models):
             pts = m.as_points() if getattr(m, "num_points", 0) > 0 else []
             if pts:
                 self.record(cls_, workload, pts, now=now)
+        if energy_models is not None:
+            for cls_, m in zip(device_classes, energy_models):
+                pts = m.as_points() if getattr(m, "num_points", 0) > 0 else []
+                if pts:
+                    self.record_energy(cls_, workload, pts)
 
     # -- persistence (the state_dict protocol + JSON on disk) -----------------
 
@@ -229,7 +300,14 @@ class ProfileRegistry:
             if ts is not None:
                 e["observed_at"] = ts  # optional field: older readers ignore it
             out.append(e)
-        return {"version": self.VERSION, "entries": out}
+        state = {"version": self.VERSION, "entries": out}
+        if self._energy:
+            # optional field: older readers ignore it (VERSION stays 1)
+            state["energy_entries"] = [
+                {"device_class": c, "workload": w, "points": [[x, s] for x, s in pts]}
+                for (c, w), pts in sorted(self._energy.items())
+            ]
+        return state
 
     @classmethod
     def from_state(
@@ -257,6 +335,17 @@ class ProfileRegistry:
                 observed[key] = float(ts)
         reg = cls(entries, max_entries=max_entries)
         reg._observed = {k: observed[k] for k in observed if k in reg._entries}
+        for e in state.get("energy_entries") or []:
+            pts = _valid_points(e.get("points", []))
+            if pts is None:
+                warnings.warn(
+                    f"skipping malformed energy registry entry "
+                    f"({e.get('device_class')!r}, {e.get('workload')!r})",
+                    UserWarning,
+                    stacklevel=2,
+                )
+                continue
+            reg._energy[(str(e["device_class"]), str(e["workload"]))] = pts
         return reg
 
     def save(self, path: str) -> None:

@@ -161,6 +161,10 @@ class _Job:
     # True when admit() warm-started this job from the profile registry —
     # arms the one-shot staleness check on the first measured round
     _warm_from_registry: bool = False
+    # per-processor energy-rate models (er_i(x) = x / E_i(x), see
+    # core/energy.py) — static per job, set at admit; None = unpriced
+    energy_models: Optional[List[PiecewiseLinearFPM]] = None
+    _ebank: Optional[ModelBank] = None
 
     def flush(self) -> None:
         """Materialize deferred observations into the scalar models (same
@@ -176,6 +180,13 @@ class _Job:
             self.flush()
             self._bank = ModelBank.from_models(self.models)
         return self._bank
+
+    def ebank(self) -> Optional[ModelBank]:
+        if self.energy_models is None:
+            return None
+        if self._ebank is None:
+            self._ebank = ModelBank.from_models(self.energy_models)
+        return self._ebank
 
     def invalidate(self) -> None:
         self._bank = None
@@ -212,6 +223,8 @@ class FleetScheduler:
         detector=None,
         reserve_knots: Optional[int] = None,
         quantize: float = 0.0,
+        power_cap: Optional[float] = None,
+        lane_buckets: bool = False,
     ):
         if backend not in ("scalar", "numpy", "jax"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -277,6 +290,19 @@ class FleetScheduler:
         # quantized fold can ever overwrite, and a drifting replica's
         # prediction at that exact x would stay stale forever.
         self.quantize = float(quantize)
+        # fleet-wide energy budget per round (same units as the jobs' energy
+        # models, see core/energy.py): every _repartition gets a post-pass
+        # that, when the time-optimal round would overspend, walks all
+        # priced jobs up a COMMON makespan-stretch factor theta along their
+        # Pareto fronts until the predicted fleet energy fits — see
+        # _apply_power_cap.  None = uncapped (bit-identical to before).
+        if power_cap is not None and not (float(power_cap) > 0):
+            raise ValueError("power_cap must be positive")
+        self.power_cap = float(power_cap) if power_cap is not None else None
+        # pad the stacked lane count to the next power of two with masked
+        # dummy lanes so admit/retire within a bucket reuses the compiled
+        # [q, p, k] programs (jax backend; see _assign_lanes)
+        self.lane_buckets = bool(lane_buckets)
         self.rounds = 0
         self.restacks = 0
         # device program launches (stacked partitions + fold-ins): THE
@@ -346,13 +372,24 @@ class FleetScheduler:
 
     # -- membership -----------------------------------------------------------
 
-    def admit(self, spec: JobSpec, models: Optional[Sequence[Any]] = None) -> str:
+    def admit(
+        self,
+        spec: JobSpec,
+        models: Optional[Sequence[Any]] = None,
+        energy_models: Optional[Sequence[Any]] = None,
+    ) -> str:
         """Admit one job.  Validation mirrors ``Scheduler.autotune`` (n >= p,
         eps > 0, cap feasibility) but fires here, naming the job, instead of
         mid-round.  ``models`` warm-starts from explicit estimates (copied);
         otherwise the profile registry is consulted under
         ``(device_class, spec.workload)``; otherwise the job starts cold
-        (even first split, exactly the paper's step 1)."""
+        (even first split, exactly the paper's step 1).
+
+        ``energy_models`` (per-processor energy-rate FPMs, see
+        ``core/energy.py:energy_model``) price the job for the fleet's
+        ``power_cap``; omitted, the registry's energy entries are consulted
+        the same way — a job with no energy pricing simply runs
+        time-optimal and is excluded from the cap's budget."""
         name = str(spec.name)
         if name in self._jobs:
             raise ValueError(f"job {name!r} already admitted")
@@ -389,6 +426,22 @@ class FleetScheduler:
             )
         else:
             job_models = [PiecewiseLinearFPM() for _ in range(self.p)]
+        if energy_models is not None:
+            if len(energy_models) != self.p:
+                raise ValueError("energy_models length != num_procs")
+            job_emodels: Optional[List[PiecewiseLinearFPM]] = [
+                PiecewiseLinearFPM.from_points(m.as_points()) for m in energy_models
+            ]
+        elif (
+            self.registry is not None
+            and spec.workload is not None
+            and self.device_classes is not None
+        ):
+            job_emodels = self.registry.warm_energy_models(
+                self.device_classes, spec.workload
+            )
+        else:
+            job_emodels = None
         budget = int(spec.probe_budget) if spec.probe_budget is not None else 2 * self.p
         self._jobs[name] = _Job(
             spec=spec,
@@ -403,6 +456,7 @@ class FleetScheduler:
                 [getattr(m, "num_points", 0) == 0 for m in job_models], dtype=bool
             ),
             _warm_from_registry=warm_from_registry,
+            energy_models=job_emodels,
         )
         self._stack_dirty = True
         return name
@@ -421,7 +475,10 @@ class FleetScheduler:
             and self.registry is not None
             and self.device_classes is not None
         ):
-            self.registry.record_job(self.device_classes, job.spec.workload, job.models)
+            self.registry.record_job(
+                self.device_classes, job.spec.workload, job.models,
+                energy_models=job.energy_models,
+            )
         if job.result is not None:
             return job.result
         if job.it == 0:
@@ -836,7 +893,10 @@ class FleetScheduler:
             raise ValueError("no registry / device_classes to save profiles into")
         for job in self._jobs.values():
             job.flush()
-            reg.record_job(self.device_classes, job.spec.workload, job.models)
+            reg.record_job(
+                self.device_classes, job.spec.workload, job.models,
+                energy_models=job.energy_models,
+            )
 
     # -- internals ------------------------------------------------------------
 
@@ -933,13 +993,30 @@ class FleetScheduler:
         if self._backend == "jax" and names:
             from ..core.modelbank_jax import JaxModelBank
 
-            self._stacked = JaxModelBank.stack(
-                [
-                    JaxModelBank.from_bank(self._jobs[nm].bank(), dtype=self.dtype)
-                    for nm in names
-                ],
-                min_k=self.reserve_knots,
-            )
+            banks = [
+                JaxModelBank.from_bank(self._jobs[nm].bank(), dtype=self.dtype)
+                for nm in names
+            ]
+            if self.lane_buckets:
+                # Pad the lane count to the next power of two with dummy
+                # monotone single-knot lanes: the stacked [q, p, k] shape —
+                # and therefore both compiled device programs — is shared by
+                # every fleet size in the bucket, so admit/retire within a
+                # bucket costs a restack but ZERO recompiles.  Dead lanes
+                # carry n=0 / caps=0 / valid=False through the partition and
+                # fold (both are exact no-ops for such lanes).
+                q_pad = 1
+                while q_pad < len(names):
+                    q_pad *= 2
+                if q_pad > len(names):
+                    dummy = JaxModelBank.from_bank(
+                        ModelBank.from_models(
+                            [PiecewiseLinearFPM.from_points([(1.0, 1.0)])] * self.p
+                        ),
+                        dtype=self.dtype,
+                    )
+                    banks.extend([dummy] * (q_pad - len(names)))
+            self._stacked = JaxModelBank.stack(banks, min_k=self.reserve_knots)
             self.restacks += 1
         self._stack_dirty = False
         return self._stacked
@@ -953,7 +1030,102 @@ class FleetScheduler:
         """One distribution per job from the current estimates — a single
         stacked device program on the jax backend, per-job host banks on
         numpy.  Identical per-lane math to q independent
-        ``SpeedStore.partition_units`` calls."""
+        ``SpeedStore.partition_units`` calls.  With ``power_cap`` set the
+        time-optimal answer gets the energy post-pass
+        (:meth:`_apply_power_cap`)."""
+        ds = self._repartition_time(jobs)
+        if self.power_cap is not None:
+            ds = self._apply_power_cap(jobs, ds)
+        return ds
+
+    def _apply_power_cap(self, jobs: List[_Job], ds: List[List[int]]) -> List[List[int]]:
+        """Fit the round's predicted fleet energy under ``power_cap`` by
+        walking every PRICED job (one with energy models) up a COMMON
+        makespan-stretch factor ``theta``: job k's allocation is re-solved
+        as the min-max-energy partition among the allocations reachable
+        within time ``theta * t_opt_k`` (``core.energy
+        .capped_energy_partition`` — the same count-under-threshold caps
+        the Pareto front sweeps, so the capped answer sits ON the job's
+        front).  ``theta`` is bisected over ``[1, theta_hi]`` where
+        ``theta_hi`` makes each job's pure energy-optimal point reachable;
+        the feasible (hi) side is kept, so the returned allocations'
+        predicted energy fits the cap whenever ANY common stretch does —
+        an infeasible cap degrades to the pure energy-optimal allocations
+        (best effort).  theta=1 is NOT a no-op: allocations with the same
+        makespan but lower energy are already taken there (the free lunch).
+        Host-side numpy (serving q is small; the device carry is untouched).
+        Unpriced jobs keep their time-optimal allocations and price out of
+        the budget."""
+        from ..core.energy import capped_energy_partition
+        from ..core.partition import _partition_units_bank as _punits
+
+        priced = [
+            (k, job) for k, job in enumerate(jobs) if job.ebank() is not None
+        ]
+        if not priced:
+            return ds
+
+        def job_energy(job: _Job, d) -> float:
+            e = job.ebank().time(np.asarray(d, dtype=np.float64))
+            darr = np.asarray(d, dtype=np.float64)
+            return float(np.where((darr > 0) & np.isfinite(e), e, 0.0).sum())
+
+        def makespan(job: _Job, d) -> float:
+            t = job.bank().time(np.asarray(d, dtype=np.float64))
+            darr = np.asarray(d, dtype=np.float64)
+            act = t[(darr > 0) & np.isfinite(t)]
+            return float(act.max()) if act.size else 0.0
+
+        if sum(job_energy(job, ds[k]) for k, job in priced) <= self.power_cap:
+            return ds
+
+        # Per-job anchors: the time-optimal makespan (theta=1) and the pure
+        # energy-optimal allocation (the far end of the job's front).
+        t_opt, d_energy, theta_hi = {}, {}, 1.0
+        for k, job in priced:
+            t_opt[k] = makespan(job, ds[k])
+            de, _ = _punits(
+                job.ebank(), int(job.spec.n), [int(c) for c in job.icaps],
+                min_units=int(job.spec.min_units),
+            )
+            d_energy[k] = [int(v) for v in de]
+            if t_opt[k] > 0:
+                theta_hi = max(theta_hi, makespan(job, de) / t_opt[k])
+
+        def solve(theta: float):
+            out = {}
+            for k, job in priced:
+                d = capped_energy_partition(
+                    job.bank(), job.ebank(), int(job.spec.n),
+                    [int(c) for c in job.icaps], theta * t_opt[k],
+                    floor_d=ds[k], min_units=int(job.spec.min_units),
+                )
+                out[k] = d if d is not None else d_energy[k]
+            return out, sum(job_energy(job, out[k]) for k, job in priced)
+
+        d_hi, e_hi = solve(theta_hi)
+        if e_hi > self.power_cap:
+            # No common stretch fits: best effort = pure energy-optimal.
+            d_hi = dict(d_energy)
+        else:
+            lo, hi = 1.0, theta_hi
+            d_lo, e_lo = solve(lo)
+            if e_lo <= self.power_cap:
+                d_hi = d_lo  # the free lunch already fits
+            else:
+                for _ in range(40):
+                    mid = 0.5 * (lo + hi)
+                    d_mid, e_mid = solve(mid)
+                    if e_mid <= self.power_cap:
+                        hi, d_hi = mid, d_mid
+                    else:
+                        lo = mid
+        out = [list(d) for d in ds]
+        for k, _ in priced:
+            out[k] = [int(v) for v in d_hi[k]]
+        return out
+
+    def _repartition_time(self, jobs: List[_Job]) -> List[List[int]]:
         for job in jobs:
             # cheap incremental mirror of the store's empty-FPM feasibility
             # check, with the job named (the batched call couldn't say who)
@@ -984,7 +1156,7 @@ class FleetScheduler:
                 out.append([int(v) for v in d])
             return out
         stacked = self._ensure_stack()
-        q = len(self._stack_names)
+        q = int(stacked.counts.shape[0])  # padded lane count under buckets
         n_arr = np.zeros(q, dtype=np.int64)
         mu_arr = np.zeros(q, dtype=np.int64)
         caps_arr = np.zeros((q, self.p), dtype=np.int64)
@@ -1092,7 +1264,7 @@ class FleetScheduler:
         if self._backend != "jax":
             return
         stacked = self._ensure_stack()
-        q = len(self._stack_names)
+        q = int(stacked.counts.shape[0])  # padded lane count under buckets
         lanes = [job.lane for job in measured]
         x = np.zeros((q, self.p), dtype=np.float64)
         s = np.ones((q, self.p), dtype=np.float64)

@@ -704,6 +704,243 @@ def test_registry_merge_keeps_freshest_on_duplicate_x():
 
 
 # ---------------------------------------------------------------------------
+# Energy: power-capped repartition + registry energy entries
+# ---------------------------------------------------------------------------
+
+
+def _energy_fixtures(p, seed):
+    """Heterogeneous speed + affine energy models (fast rows power-hungry)."""
+    from repro.core.energy import energy_model
+
+    rng = np.random.default_rng(seed)
+    xs = [1.0, 10.0, 50.0, 200.0, 800.0]
+    speed = [
+        PiecewiseLinearFPM.from_points(
+            [(x, float(1.0 + 2.0 * rng.random()) * (1.0 + 0.1 * (i % 3)))
+             for x in xs]
+        )
+        for i in range(p)
+    ]
+    energy = [
+        energy_model(
+            [(x, 3.0 * (i + 1) + float(0.1 + rng.random()) * x) for x in xs]
+        )
+        for i in range(p)
+    ]
+    return speed, energy
+
+
+def _fleet_round_energy(fleet, name, d):
+    job = fleet._jobs[name]
+    e = job.ebank().time(np.asarray(d, dtype=np.float64))
+    return float(e.sum())
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_power_cap_binds_and_fits_budget(backend):
+    """A binding power_cap yields per-round allocations whose predicted
+    fleet energy fits the budget; an uncapped fleet with identical models
+    overspends it (the cap actually binds)."""
+    from repro.core.partition import _partition_units_bank
+
+    p = 5
+
+    def build(cap):
+        fl = FleetScheduler(p, backend=backend, power_cap=cap)
+        for j, n in enumerate((300, 500)):
+            sm, em = _energy_fixtures(p, seed=10 + j)
+            fl.admit(JobSpec(str(j), n), models=sm, energy_models=em)
+        return fl
+
+    with enable_x64():
+        free = build(None)
+        ds0 = free.rebalance()
+        e_free = sum(_fleet_round_energy(free, nm, d) for nm, d in ds0.items())
+        # the energy-optimal floor: per-job min-max-energy partitions
+        e_floor = 0.0
+        for nm, job in free._jobs.items():
+            de, _ = _partition_units_bank(
+                job.ebank(), job.spec.n, [int(c) for c in job.icaps],
+                min_units=0,
+            )
+            e_floor += _fleet_round_energy(free, nm, de)
+        assert e_floor < e_free  # non-degenerate: the cap can bind
+        cap = 0.5 * (e_floor + e_free)
+
+        capped = build(cap)
+        ds1 = capped.rebalance()
+        e_capped = sum(
+            _fleet_round_energy(capped, nm, d) for nm, d in ds1.items()
+        )
+    assert e_capped <= cap + 1e-9
+    assert e_free > cap  # uncapped would overspend
+    for nm, d in ds1.items():
+        assert sum(d) == capped._jobs[nm].spec.n
+
+
+def test_power_cap_none_is_bit_identical():
+    """power_cap=None must not perturb a single allocation (do-no-harm)."""
+    p = 4
+    with enable_x64():
+        a = FleetScheduler(p, backend="jax")
+        b = FleetScheduler(p, backend="jax", power_cap=None)
+        sm, em = _energy_fixtures(p, seed=3)
+        for fl in (a, b):
+            fl.admit(JobSpec("t", 200), models=sm, energy_models=em)
+        assert a.rebalance() == b.rebalance()
+
+
+def test_power_cap_unpriced_jobs_run_time_optimal():
+    """Jobs without energy models keep their time-optimal allocations and
+    are excluded from the budget."""
+    p = 4
+    sm, em = _energy_fixtures(p, seed=7)
+    with enable_x64():
+        free = FleetScheduler(p, backend="jax")
+        free.admit(JobSpec("u", 240), models=sm)
+        want = free.rebalance()["u"]
+        capped = FleetScheduler(p, backend="jax", power_cap=1e-6)
+        capped.admit(JobSpec("u", 240), models=sm)
+        assert capped.rebalance()["u"] == want
+
+
+def test_power_cap_infeasible_degrades_to_energy_optimal():
+    from repro.core.partition import _partition_units_bank
+
+    p = 4
+    sm, em = _energy_fixtures(p, seed=9)
+    with enable_x64():
+        fl = FleetScheduler(p, backend="numpy", power_cap=1e-9)
+        fl.admit(JobSpec("t", 200), models=sm, energy_models=em)
+        d = fl.rebalance()["t"]
+        job = fl._jobs["t"]
+        de, _ = _partition_units_bank(
+            job.ebank(), 200, [int(c) for c in job.icaps], min_units=0
+        )
+    assert d == [int(v) for v in de]
+
+
+def test_registry_energy_entries_roundtrip(tmp_path):
+    """Energy profiles persist beside speed ones and warm-start the next
+    session's admits; older-format states load clean without them."""
+    p = 4
+    classes = ["cpu", "cpu", "gpu", "gpu"]
+    # same-class rows share energy models so class-keyed merging is lossless
+    from repro.core.energy import energy_model
+
+    xs = [1.0, 10.0, 100.0]
+    per_class = {"cpu": (5.0, 0.9), "gpu": (20.0, 0.3)}
+    em = [
+        energy_model([(x, per_class[c][0] + per_class[c][1] * x) for x in xs])
+        for c in classes
+    ]
+    sm, _ = _energy_fixtures(p, seed=1)
+    reg = ProfileRegistry()
+    fl = FleetScheduler(p, backend="numpy", registry=reg, device_classes=classes)
+    fl.admit(JobSpec("d", 100, workload="decode"), models=sm, energy_models=em)
+    fl.rebalance()
+    fl.retire("d")
+    path = tmp_path / "profiles.json"
+    reg.save(str(path))
+    reg2 = ProfileRegistry.load(str(path))
+    warm = reg2.warm_energy_models(classes, "decode")
+    assert warm is not None and len(warm) == p
+    assert warm[0].as_points() == em[0].as_points()
+    # a new admit picks the energy profile up from the registry
+    fl2 = FleetScheduler(p, backend="numpy", registry=reg2, device_classes=classes)
+    fl2.admit(JobSpec("d2", 100, workload="decode"), models=sm)
+    assert fl2._jobs["d2"].energy_models is not None
+    # all-or-nothing: a class without an energy entry means no warm bank
+    assert reg2.warm_energy_models(["cpu", "tpu"], "decode") is None
+    # pre-energy states (no energy_entries field) load clean
+    state = reg2.state_dict()
+    state.pop("energy_entries")
+    assert ProfileRegistry.from_state(state).warm_energy_models(
+        classes, "decode"
+    ) is None
+
+
+# ---------------------------------------------------------------------------
+# Lane buckets: padded stacks, bit parity, zero recompiles within a bucket
+# ---------------------------------------------------------------------------
+
+
+def test_lane_buckets_bit_parity_and_zero_recompiles():
+    """Bucketed fleets serve bit-identical allocations to unbucketed ones,
+    and an admit WITHIN a power-of-two bucket reuses both compiled device
+    programs (zero recompiles — the satellite's contract)."""
+    p = 5
+
+    def mk(buckets):
+        fl = FleetScheduler(
+            p, backend="jax", reserve_knots=16, lane_buckets=buckets
+        )
+        for j in range(3):
+            sm, _ = _energy_fixtures(p, seed=30 + j)
+            fl.admit(JobSpec(f"j{j}", 150 + 40 * j), models=sm)
+        return fl
+
+    with enable_x64():
+        plain, bucketed = mk(False), mk(True)
+        assert plain.rebalance() == bucketed.rebalance()
+        # pad 3 -> 4 lanes: the stacked carry is wider than the job list
+        assert int(bucketed._stacked.counts.shape[0]) == 4
+        assert len(bucketed._stack_names) == 3
+
+        # warm both programs at the padded shape, then admit within bucket
+        bucketed.observe({"j0": [0.1 * (i + 1) for i in range(p)]})
+        bucketed.rebalance()
+        c0 = mbj._partition_units_jit._cache_size()
+        f0 = mbj._fold_in_jit._cache_size()
+        sm, _ = _energy_fixtures(p, seed=33)
+        bucketed.admit(JobSpec("j3", 400), models=sm)
+        ds = bucketed.rebalance()
+        bucketed.observe({"j3": [0.1 * (i + 1) for i in range(p)]})
+        assert mbj._partition_units_jit._cache_size() == c0
+        assert mbj._fold_in_jit._cache_size() == f0
+        assert sum(ds["j3"]) == 400
+
+        # parity holds after the admit too (same folds replayed)
+        plain.observe({"j0": [0.1 * (i + 1) for i in range(p)]})
+        plain.admit(JobSpec("j3", 400), models=sm)
+        assert plain.rebalance() == ds
+
+
+def test_lane_buckets_full_autotune_parity():
+    """The measured lock-step loop (step/run) is bit-identical under
+    bucketing — dead lanes must be exact no-ops through partition AND
+    fold."""
+    rng = np.random.default_rng(500)
+    p, q = 4, 3  # q=3 pads to 4: one dead lane in every program
+    base, knee = _knee_params(rng, q, p)
+
+    def run(buckets):
+        fleet = FleetScheduler(p, backend="jax", lane_buckets=buckets)
+        for j in range(q):
+            fleet.admit(
+                JobSpec(name=str(j), n=50 + 30 * j, eps=0.05, min_units=1,
+                        max_iter=6)
+            )
+        ex = BatchedSimulatedExecutor2D(
+            time_fn_batch_2d=_batch_fn(base, knee), p=p, q=q,
+            job_names=[str(j) for j in range(q)],
+        )
+        results = fleet.run(ex)
+        return fleet, results
+
+    with enable_x64():
+        fa, ra = run(False)
+        fb, rb = run(True)
+    for j in range(q):
+        name = str(j)
+        assert ra[name].allocations == rb[name].allocations
+        assert ra[name].diagnostics["history"] == rb[name].diagnostics["history"]
+        assert [m.as_points() for m in fa.models(name)] == [
+            m.as_points() for m in fb.models(name)
+        ]
+
+
+# ---------------------------------------------------------------------------
 # Serving fleet mode
 # ---------------------------------------------------------------------------
 

@@ -279,6 +279,36 @@ def test_repartition_returns_partition():
     assert part.t_star is not None
 
 
+def test_per_call_caps_are_one_shot():
+    """Regression: per-call ``caps`` used to overwrite ``self.caps`` and
+    silently constrain every later repartition/observe/autotune in the
+    session.  They are one-shot now; ``persist_caps=True`` opts back in."""
+    models = _fleet(4, seed=11)
+
+    sched = Scheduler(SpeedStore.from_models(models), n_units=60, min_units=1)
+    free = sched.partition().allocations
+    hot = int(np.argmax(free))  # cap the busiest processor so it binds
+    caps = [100] * 4
+    caps[hot] = 1
+    assert free[hot] > 1
+    capped = sched.partition(caps=caps).allocations
+    assert capped[hot] == 1
+    assert sched.caps is None  # session state untouched
+    assert sched.repartition().allocations == free  # failing before the fix
+
+    sticky = Scheduler(SpeedStore.from_models(models), n_units=60, min_units=1)
+    assert sticky.partition(caps=caps, persist_caps=True).allocations[hot] == 1
+    assert sticky.caps == caps
+    assert sticky.repartition().allocations[hot] == 1
+
+    # construction-time caps still persist (they are session state)
+    sess = Scheduler(
+        SpeedStore.from_models(models), n_units=60, min_units=1, caps=caps
+    )
+    assert sess.partition().allocations[hot] == 1
+    assert sess.repartition().allocations[hot] == 1
+
+
 def test_join_leave_lifecycle():
     sched = Scheduler(n_units=60, num_groups=3, eps=0.05, min_units=1, smooth=1.0)
     for _ in range(12):
