@@ -17,7 +17,17 @@ fold-in program), where q independent ``Scheduler`` sessions pay q (resp.
     a given accuracy"): models frozen, tenant loads drift every round, and
     the per-round work is re-partitioning everyone —
     ``FleetScheduler.rebalance`` (one stacked program) vs q per-store
-    partitions.  This is the dispatch-bound regime where batching pays.
+    partitions.  This is the dispatch-bound regime where batching pays;
+  * **pipelined serving epochs** (``pipeline_*`` columns) — the same
+    steady state run as full rebalance+observe epochs, sync vs
+    ``pipeline=True`` depth 1: the sync epoch serializes the fold with the
+    next partition (the partition reads the carry the fold writes), the
+    pipelined epoch partitions against the double-buffered previous carry
+    and pre-dispatches the next epoch's partition from ``observe`` while
+    the fold is in flight, so both device programs overlap the inter-epoch
+    host work.  Gated: the pipelined epoch must beat sync at q >= 16,
+    p=100 (and at the q=8 quick-mode smoke row), with a 3-attempt median
+    retry guarding every wall-clock gate against host-profile jitter.
 
 Sweeps q ∈ {1..64} at p=100 and p ∈ {1000, 10000} at q=16 (full mode).
 
@@ -46,6 +56,9 @@ Acceptance gates (exit 1):
     q=8 / p=100: a noise-free fleet must reproduce q independent
     ``Scheduler.autotune`` loops bit-for-bit (allocations, histories,
     folded estimates), plus the dispatch-ratio gate at q=8, PLUS the
+    pipeline-vs-sync bit-parity gate (depth 0 and depth 1 reproduce the
+    sync fleet bit-for-bit on the deterministic run) and the flaky-guarded
+    pipelined-epoch wall-clock smoke at q=8, PLUS the
     hierarchical consistency gate: a single-group hier fleet reproduces
     the flat fleet bit-for-bit and a multi-group hier fleet converges to a
     makespan within 5% of flat, PLUS the lane-bucket gate: a
@@ -237,6 +250,140 @@ def rebalance_rounds(q, p, *, rounds, warmup, seed=0, groups=None):
         "rebalance_seq_dispatches_per_round": float(q),
         "rebalance_dispatch_ratio": q / fleet_dispatch,
     }
+
+
+def pipeline_rounds(q, p, *, rounds, warmup, seed=0, depth=1):
+    """Steady-state serving epochs under a FIXED tenancy, sync vs
+    ``pipeline=True``: each epoch is ``rebalance()`` (one stacked
+    partition) + ``observe(times)`` (one stacked fold-in).  The sync epoch
+    serializes — its partition reads the carry the previous epoch's fold
+    writes, so the timed ``rebalance`` waits for the fold before the
+    partition even starts.  The depth-1 pipeline partitions against the
+    double-buffered PREVIOUS carry (a speculative read, validated against
+    the seen sets — serving tenants admitted with learned models never
+    populate them, so every read is consumed) and ``observe`` pre-dispatches
+    the next epoch's partition while its fold is still in flight: the next
+    ``rebalance`` only fetches, and both device programs overlap the
+    inter-epoch host work.  Interleaved per-epoch timing, same convention
+    as the other regimes."""
+    _, warm, base, knee = make_tenants(q, p, seed=seed)
+    ns = [100 * p + 7 * j for j in range(q)]
+    names = [f"t{j}" for j in range(q)]
+
+    def mk(pipeline):
+        fleet = FleetScheduler(
+            p, backend="jax", pipeline=pipeline, pipeline_depth=depth
+        )
+        for j in range(q):
+            fleet.admit(
+                JobSpec(name=names[j], n=ns[j], eps=1e-12, min_units=1),
+                models=warm[j],
+            )
+        return fleet
+
+    def times_for(ds, rng):
+        out = {}
+        for j, nm in enumerate(names):
+            x = np.asarray(ds[nm], dtype=np.float64)
+            t = x * base[j] * (
+                1.0 + np.where(x > knee[j], 3.0 * (x - knee[j]) / knee[j], 0.0)
+            )
+            t = np.where(x > 0, np.maximum(
+                t * (1.0 + 0.02 * rng.standard_normal(p)), 1e-12), 0.0)
+            out[nm] = [float(v) for v in t]
+        return out
+
+    sync, pipe = mk(False), mk(True)
+    # identical noise streams: the two fleets see the same observations as
+    # long as their trajectories agree, so the comparison stays apples to
+    # apples even though wall-clock is the only gated quantity
+    rng_s = np.random.default_rng(seed + 5)
+    rng_p = np.random.default_rng(seed + 5)
+    sync_times, pipe_times, ratios = [], [], []
+    for r in range(warmup + rounds):
+        t0 = time.perf_counter()
+        ds = sync.rebalance()
+        sync.observe(times_for(ds, rng_s))
+        ts = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        dp = pipe.rebalance()
+        pipe.observe(times_for(dp, rng_p))
+        tp = time.perf_counter() - t0
+        if r >= warmup:
+            sync_times.append(ts)
+            pipe_times.append(tp)
+            ratios.append(ts / tp)
+    return {
+        "pipeline_round_ms": float(np.median(pipe_times) * 1e3),
+        "pipeline_sync_round_ms": float(np.median(sync_times) * 1e3),
+        "pipeline_speedup": float(np.median(ratios)),
+        "pipeline_stale_reads": pipe.stale_reads,
+        "pipeline_speculative_misses": pipe.speculative_misses,
+        "pipeline_predispatches": pipe.predispatches,
+    }
+
+
+def _median_retry(measure, metric_key, threshold, attempts=3):
+    """Flaky-guard for wall-clock gates: measure once; only when the gated
+    metric misses ``threshold`` re-measure (``attempts`` total) and keep
+    the attempt with the MEDIAN metric.  One jittery round on a loaded CI
+    host can no longer fail a parity-correct build — and cannot rescue a
+    genuinely slow one either, since the median of three must pass (the
+    PR 6 recalibration note made host-profile jitter a known hazard)."""
+    row = measure(0)
+    row["attempts"] = 1
+    if row[metric_key] >= threshold:
+        return row
+    rows = [row] + [measure(a) for a in range(1, attempts)]
+    rows.sort(key=lambda r: r[metric_key])
+    row = rows[len(rows) // 2]
+    row["attempts"] = attempts
+    return row
+
+
+def pipeline_parity_gate(q=8, p=100, seed=17) -> bool:
+    """pipeline-vs-sync bit-parity (the CI smoke): on a deterministic
+    measuring fleet every depth-1 speculation misses its seen-set
+    validation, so the pipelined autotune trajectory must reproduce the
+    sync fleet bit-for-bit at depth 0 AND depth 1 (the 200-case fuzz
+    battery lives in tests/test_fleet_pipeline.py)."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform(1e-5, 9e-5, (q, p))
+    knee = rng.uniform(50.0, 500.0, (q, p))
+
+    def batch_fn(X):
+        return X * base * (1.0 + np.where(X > knee, 3.0 * (X - knee) / knee, 0.0))
+
+    ns = [20 * p + 13 * j for j in range(q)]
+    names = [f"t{j}" for j in range(q)]
+
+    def run(pipeline, pipeline_depth):
+        fleet = FleetScheduler(
+            p, backend="jax", pipeline=pipeline, pipeline_depth=pipeline_depth
+        )
+        for j in range(q):
+            fleet.admit(JobSpec(name=names[j], n=ns[j], eps=0.03, min_units=1,
+                                max_iter=8))
+        ex = BatchedSimulatedExecutor2D(
+            time_fn_batch_2d=batch_fn, p=p, q=q, job_names=names
+        )
+        return fleet.run(ex)
+
+    sync = run(False, 1)
+    ok = True
+    for pipeline_depth in (0, 1):
+        piped = run(True, pipeline_depth)
+        for nm in names:
+            r_p, r_s = piped[nm], sync[nm]
+            if (
+                r_p.allocations != r_s.allocations
+                or r_p.times != r_s.times
+                or r_p.diagnostics["history"] != r_s.diagnostics["history"]
+            ):
+                print(f"PIPELINE PARITY FAIL: job {nm} diverges from sync "
+                      f"at depth {pipeline_depth}")
+                ok = False
+    return ok
 
 
 def parity_gate(q=8, p=100, seed=11) -> bool:
@@ -477,9 +624,32 @@ def main(argv=None) -> int:
     rows = []
     for q, p in sweep:
         row = steady_state_rounds(q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p)
-        row.update(
-            rebalance_rounds(q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 1)
-        )
+        # the 2.5x wall-clock gate runs on these rows: flaky-guarded
+        gated_wallclock = q >= 16 and p <= 100
+        if gated_wallclock:
+            row.update(_median_retry(
+                lambda a: rebalance_rounds(
+                    q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 1 + a
+                ),
+                "rebalance_speedup", 2.5,
+            ))
+        else:
+            row.update(rebalance_rounds(
+                q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 1
+            ))
+        # pipelined serving epochs vs sync (gated below sync at q >= 16
+        # and, in quick mode, at the q=8 smoke row — both flaky-guarded)
+        if gated_wallclock or (args.quick and q >= 8):
+            row.update(_median_retry(
+                lambda a: pipeline_rounds(
+                    q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 2 + a
+                ),
+                "pipeline_speedup", 1.0,
+            ))
+        else:
+            row.update(pipeline_rounds(
+                q, p, rounds=rounds, warmup=warmup, seed=q * 1000 + p + 2
+            ))
         rows.append(row)
         print(
             f"q={q:3d} p={p:6d}"
@@ -487,6 +657,9 @@ def main(argv=None) -> int:
             f" ({row['wallclock_speedup']:5.2f}x)"
             f"  rebalance {row['rebalance_fleet_ms']:8.2f} vs "
             f"{row['rebalance_seq_ms']:8.2f} ms ({row['rebalance_speedup']:5.2f}x)"
+            f"  pipeline {row['pipeline_round_ms']:8.2f} vs "
+            f"{row['pipeline_sync_round_ms']:8.2f} ms "
+            f"({row['pipeline_speedup']:5.2f}x)"
             f"  dispatches {row['fleet_dispatches_per_round']:.1f} vs "
             f"{row['seq_dispatches_per_round']:.0f}"
             f" ({row['dispatch_ratio']:5.1f}x fewer)",
@@ -529,6 +702,10 @@ def main(argv=None) -> int:
     parity_ok = parity_gate()
     print("parity:", "OK" if parity_ok else "FAIL")
 
+    print("pipeline parity gate (q=8, p=100, depth 0 and 1) ...", flush=True)
+    pipeline_ok = pipeline_parity_gate()
+    print("pipeline parity:", "OK" if pipeline_ok else "FAIL")
+
     print("hier consistency gate (q=4, p=100, noise-free) ...", flush=True)
     hier_ok = hier_parity_gate()
     print("hier consistency:", "OK" if hier_ok else "FAIL")
@@ -550,7 +727,12 @@ def main(argv=None) -> int:
             "even lose to sequential there) and steady-state rebalance "
             "rounds (models frozen, loads drift: FleetScheduler.rebalance "
             "= 1 program vs q — the dispatch-bound serving regime the >=2.5x "
-            "wall-clock gate runs on at p=100); medians post-compile, "
+            "wall-clock gate runs on at p=100) and pipelined serving epochs "
+            "(rebalance+observe per epoch, sync vs pipeline=True depth 1: "
+            "double-buffered carry + pre-dispatched next partition overlap "
+            "the fold and the inter-epoch host work — gated below sync at "
+            "q>=16, p=100, 3-attempt median retry on every wall-clock "
+            "gate); medians post-compile, "
             "fleet/sequential rounds interleaved so shared-runner load "
             "drift hits both together (speedup = median per-round ratio); "
             "parity = "
@@ -559,6 +741,7 @@ def main(argv=None) -> int:
         ),
         "rounds_timed": rounds,
         "parity_q8_p100": parity_ok,
+        "pipeline_parity_q8_p100": pipeline_ok,
         "hier_parity_q4_p100": hier_ok,
         "bucket_q3_p50": bucket_ok,
         "sweep": rows,
@@ -571,6 +754,10 @@ def main(argv=None) -> int:
 
     rc = 0
     if not parity_ok:
+        rc = 1
+    if not pipeline_ok:
+        print("FAIL: pipelined fleet diverges from sync on the deterministic "
+              "parity run at q=8, p=100")
         rc = 1
     if not hier_ok:
         print("FAIL: hierarchical route diverges from flat at q=4, p=100")
@@ -609,6 +796,17 @@ def main(argv=None) -> int:
                       f"{row['rebalance_speedup']:.2f}x < 2.5x at q={row['q']}, "
                       f"p={row['p']}")
                 rc = 1
+            # The pipelined serving epoch must beat the sync epoch where
+            # dispatch overlap pays (the serialized fold->partition wait is
+            # per-round overhead at every p, but gated on the same
+            # dispatch-bound rows as the rebalance gate; flaky-guarded by
+            # the 3-attempt median retry above).
+            if row["p"] <= 100 and row["pipeline_speedup"] < 1.0:
+                print(f"FAIL: pipelined round {row['pipeline_round_ms']:.2f} ms "
+                      f"not below sync {row['pipeline_sync_round_ms']:.2f} ms "
+                      f"at q={row['q']}, p={row['p']} "
+                      f"({row['pipeline_speedup']:.2f}x)")
+                rc = 1
     # Recovery gate: the hierarchical route must break the p=10^4 cache
     # wall — the seed flat stacked round lost to sequential there (0.45x);
     # two-level with cache-blocked inner groups must be >= 1.0x.
@@ -619,12 +817,17 @@ def main(argv=None) -> int:
                       f" < 1.0x vs sequential at q=16, p=10^4 (cache wall "
                       f"not recovered)")
                 rc = 1
-    # quick mode: the dispatch economics must already show at q=8
+    # quick mode: the dispatch economics must already show at q=8, and the
+    # pipelined epoch must not lose to sync (flaky-guarded wall-clock smoke)
     if args.quick:
         for row in rows:
             if row["q"] >= 8 and row["dispatch_ratio"] < row["q"]:
                 print(f"FAIL: dispatch ratio {row['dispatch_ratio']:.1f}x < "
                       f"q={row['q']} in quick sweep")
+                rc = 1
+            if row["q"] >= 8 and row["pipeline_speedup"] < 1.0:
+                print(f"FAIL: pipelined round {row['pipeline_speedup']:.2f}x "
+                      f"vs sync in quick sweep at q={row['q']}")
                 rc = 1
     return rc
 

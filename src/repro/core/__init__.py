@@ -57,6 +57,7 @@ from .executor import (
     BatchedSimulatedExecutor,
     BatchedSimulatedExecutor2D,
     CallableExecutor,
+    DelayedBatchedExecutor,
     Executor,
     FleetExecutor,
     FleetRoundLog,
@@ -110,6 +111,7 @@ __all__ = [
     "BatchedSimulatedExecutor",
     "BatchedSimulatedExecutor2D",
     "CallableExecutor",
+    "DelayedBatchedExecutor",
     "FleetExecutor",
     "FleetRoundLog",
     "ConstantModel",

@@ -60,7 +60,7 @@ from jax import lax
 
 from .modelbank import ModelBank
 
-__all__ = ["JaxModelBank", "enable_compilation_cache"]
+__all__ = ["JaxModelBank", "enable_compilation_cache", "fetch_partition"]
 
 
 def enable_compilation_cache(path: str) -> None:
@@ -613,8 +613,7 @@ _hier_inner_jit = partial(
 )(_hier_inner_map)
 
 
-@partial(jax.jit, donate_argnums=_DONATE)
-def _fold_in_jit(xs, ss, counts, x, s, valid):
+def _fold_in_impl(xs, ss, counts, x, s, valid):
     """Vectorized sorted insert of one ``(x_i, s_i)`` observation per row.
 
     Exactly ``PiecewiseLinearFPM.add_point`` semantics, for all rows at once:
@@ -655,6 +654,15 @@ def _fold_in_jit(xs, ss, counts, x, s, valid):
     )
 
 
+_fold_in_jit = partial(jax.jit, donate_argnums=_DONATE)(_fold_in_impl)
+# Non-donating twin: double-buffered callers (the fleet's pipelined rounds)
+# fold into a NEW carry while the previous generation's buffers stay valid,
+# so an in-flight repartition can keep reading them.  On CPU (no donation)
+# the two behave identically; keeping separate jit caches means a pipelined
+# fleet never perturbs the donating path's recompile accounting.
+_fold_in_nodonate_jit = jax.jit(_fold_in_impl)
+
+
 # ---------------------------------------------------------------------------
 # The bank
 # ---------------------------------------------------------------------------
@@ -691,6 +699,12 @@ class JaxModelBank:
     # so energy.time(x) == E(x)) — see the "time and energy" section in
     # modelbank.py and core/energy.py.
     energy: Optional["JaxModelBank"] = None
+    # Fold-in generation tag (host int): construction paths start at 0 and
+    # every ``fold_in`` returns a bank one generation newer.  Double-buffered
+    # consumers (the fleet's pipelined rounds) use the tag to bound how
+    # stale a carry a repartition may read — never more than
+    # ``pipeline_depth`` fold generations behind the newest.
+    generation: int = 0
 
     is_jax = True  # duck-type marker for the partition.py dispatcher
 
@@ -857,6 +871,7 @@ class JaxModelBank:
             # positive per-row scaling preserves time-monotonicity
             monotone=self.monotone if positive else None,
             monotone_cols=self.monotone_cols if positive else None,
+            generation=self.generation,
             energy=self.energy,  # problem-size semantics unchanged
         )
 
@@ -868,7 +883,7 @@ class JaxModelBank:
             xs=jnp.array(self.xs), ss=jnp.array(self.ss),
             counts=jnp.array(self.counts), max_count=self.max_count,
             empty_rows=self.empty_rows, monotone=self.monotone,
-            monotone_cols=self.monotone_cols,
+            monotone_cols=self.monotone_cols, generation=self.generation,
             energy=self.energy.copy() if self.energy is not None else None,
         )
 
@@ -886,7 +901,7 @@ class JaxModelBank:
             xs=self.xs, ss=self.ss, counts=self.counts,
             max_count=self.max_count, empty_rows=self.empty_rows,
             monotone=self.monotone, monotone_cols=self.monotone_cols,
-            energy=energy,
+            generation=self.generation, energy=energy,
         )
 
     def energy_at(self, d) -> jnp.ndarray:
@@ -985,7 +1000,7 @@ class JaxModelBank:
     def partition_units(
         self, n, caps=None, *, min_units=0, max_steps: int = 200,
         with_t: bool = False, completion: str = "auto",
-        completion_lanes=None,
+        completion_lanes=None, defer: bool = False,
     ) -> np.ndarray:
         """Integer partition on device; host-side feasibility checks raise
         the same ``ValueError`` s as the scalar and numpy-bank paths.
@@ -1008,6 +1023,14 @@ class JaxModelBank:
         by the fleet scheduler) overrides the routing explicitly — True
         lanes take the bulk grant, False lanes the exact loop — keeping
         mixed-mode fleets in one device program.
+
+        ``defer=True`` dispatches the device program and returns WITHOUT
+        blocking: the result is a ``(d, ok)`` pair of device arrays (JAX
+        async dispatch keeps computing in the background) to be materialized
+        later with :func:`fetch_partition` — which performs the same
+        integer-completion feasibility raise this call would have.  The
+        pipelined fleet round uses this to overlap next round's repartition
+        with the in-flight fold and the host-side bookkeeping between them.
         """
         if completion not in ("auto", "threshold", "greedy"):
             raise ValueError(f"unknown completion mode {completion!r}")
@@ -1073,6 +1096,8 @@ class JaxModelBank:
             jnp.asarray(lanes_host),
             completion_fast=fast,
         )
+        if defer:
+            return (d, ok, t_star) if with_t else (d, ok)
         if not bool(np.all(np.asarray(ok))):
             raise ValueError("caps infeasible during integer completion")
         if with_t:
@@ -1081,11 +1106,18 @@ class JaxModelBank:
 
     # -- device-resident observation fold-in ---------------------------------
 
-    def fold_in(self, x, s, valid=None) -> "JaxModelBank":
+    def fold_in(self, x, s, valid=None, *, donate: bool = True) -> "JaxModelBank":
         """Insert one observation ``(x_i, s_i)`` per row (vectorized sorted
         insert; duplicate ``x`` replaces the speed).  Returns the updated
         bank; the old buffers are donated where the platform supports it.
-        Grows the padded width (by doubling) when any row is full."""
+        Grows the padded width (by doubling) when any row is full.
+
+        ``donate=False`` routes through a non-donating twin of the fold
+        kernel so THIS bank's buffers stay valid after the call — the
+        double-buffer contract pipelined fleet rounds rely on (the previous
+        generation keeps serving an in-flight repartition while the new one
+        folds).  The returned bank is tagged one :attr:`generation` newer
+        either way."""
         x = jnp.broadcast_to(jnp.asarray(x, self.dtype), self.counts.shape)
         s = jnp.broadcast_to(jnp.asarray(s, self.dtype), self.counts.shape)
         # valid is host data in every caller (DFPA / BalanceController build
@@ -1111,9 +1143,11 @@ class JaxModelBank:
             if bound >= k:
                 k = max(2 * k, 1)
                 xs, ss = self._padded_to(k)
-        nxs, nss, ncounts = _fold_in_jit(xs, ss, self.counts, x, s, valid)
+        kernel = _fold_in_jit if donate else _fold_in_nodonate_jit
+        nxs, nss, ncounts = kernel(xs, ss, self.counts, x, s, valid)
         return JaxModelBank(
             xs=nxs, ss=nss, counts=ncounts, max_count=min(bound + 1, k),
+            generation=self.generation + 1,
             empty_rows=self._empty_rows_host() & ~valid_host,
             # The inserted points can create OR (duplicate-x replace) remove
             # a monotonicity violation; the flag is re-resolved lazily by
@@ -1123,3 +1157,17 @@ class JaxModelBank:
             # energy observations into it directly (it is a bank).
             energy=self.energy,
         )
+
+
+def fetch_partition(deferred) -> np.ndarray:
+    """Materialize a ``partition_units(..., defer=True)`` result: blocks on
+    the in-flight device program, runs the integer-completion feasibility
+    check the eager call would have run, and returns the host allocation
+    array (plus ``t_star`` when the deferred call used ``with_t=True``)."""
+    d, ok = deferred[0], deferred[1]
+    d_host = np.asarray(d)
+    if not bool(np.all(np.asarray(ok))):
+        raise ValueError("caps infeasible during integer completion")
+    if len(deferred) == 3:
+        return d_host, np.asarray(deferred[2])
+    return d_host

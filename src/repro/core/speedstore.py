@@ -157,6 +157,12 @@ class SpeedStore:
         self._models = list(models) if models is not None else None
         self.backend = backend
         self.dtype = dtype  # device-bank float dtype policy (None = native)
+        # Session-local fold counter, aligned with the device carry's
+        # JaxModelBank.generation tag on the jax backend (a lazy carry
+        # rebuild resets the bank tag but not this counter): pipelined
+        # consumers use generations to bound estimate staleness, and tests
+        # assert the two advance in lock-step across folds.
+        self.fold_generation = 0
         self._np_bank = bank  # wrapped ModelBank (models is None) only
         self._jbank = jbank  # device carry (jax backend); None -> lazy rebuild
         # Optional energy sub-store (same backend): energy-rate models
@@ -446,6 +452,7 @@ class SpeedStore:
                 self._models[i].add_point(xi, si)
         if self.backend == "jax":
             self._jbank = self._carry().fold_in(xs, ss, vv)
+        self.fold_generation += 1
         return self
 
     # -- the energy sub-store (core/energy.py) -------------------------------

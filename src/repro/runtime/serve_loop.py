@@ -188,6 +188,8 @@ class ReplicaDispatcher:
         reserve_knots: Optional[int] = None,
         quantize: Optional[float] = None,
         staleness_tol: Optional[float] = None,
+        pipeline: bool = False,
+        pipeline_depth: int = 1,
         **kw,
     ) -> Dict[str, Partition]:
         """Balance every tenant's chunk stream concurrently: ``tenants``
@@ -205,7 +207,12 @@ class ReplicaDispatcher:
         compilations.  Only a backend or replica-count change pays a fresh
         session — and when a registry is attached, the old session's learned
         profiles are checkpointed into it first so the fresh session
-        warm-starts instead of re-probing cold."""
+        warm-starts instead of re-probing cold.
+
+        ``pipeline=``/``pipeline_depth=`` pick the round lifecycle (see
+        "Round lifecycle: sync vs pipelined" in ``fleet/scheduler.py``);
+        toggling the mode on a warm session drains the in-flight pipeline
+        first, so the switch is safe mid-tenancy."""
         from ..fleet import FleetScheduler, JobSpec
 
         fleet = self.fleet
@@ -230,8 +237,24 @@ class ReplicaDispatcher:
                 reserve_knots=reserve_knots,
                 quantize=quantize if quantize is not None else 0.0,
                 staleness_tol=staleness_tol,
+                pipeline=pipeline,
+                pipeline_depth=pipeline_depth,
             )
         else:
+            if bool(pipeline) != fleet.pipeline or int(
+                pipeline_depth
+            ) != fleet.pipeline_depth:
+                # Mode toggles reuse the warm session: drain first so no
+                # stale carry or pre-dispatched partition crosses the switch.
+                if pipeline and fleet.backend == "scalar":
+                    raise ValueError(
+                        'pipeline=True requires a banked backend ("numpy" or "jax")'
+                    )
+                if pipeline_depth not in (0, 1):
+                    raise ValueError("pipeline_depth must be 0 or 1")
+                fleet.drain()
+                fleet.pipeline = bool(pipeline)
+                fleet.pipeline_depth = int(pipeline_depth)
             if quantize is not None:
                 fleet.quantize = float(quantize)
             if staleness_tol is not None:
