@@ -323,6 +323,77 @@ def pipeline_rounds(q, p, *, rounds, warmup, seed=0, depth=1):
     }
 
 
+def obs_overhead_rounds(q, p, *, rounds, warmup, seed=0, tel=None):
+    """ENABLED-telemetry overhead on serving epochs: two identical fleets
+    (same warm models, same noise stream) advance interleaved — one under an
+    installed ``repro.obs.Telemetry`` sink, one under the default no-op —
+    and the gated metric is the median per-epoch wall ratio
+    disabled/enabled (``obs_speedup``; 1.0 = free, the gate holds it
+    >= 0.98, i.e. enabled within 2% of disabled).  The telemetry sink is
+    ring-bounded so the recording itself cannot grow the round."""
+    from repro import obs
+
+    if tel is None:
+        tel = obs.Telemetry(capacity=8192)
+    _, warm, base, knee = make_tenants(q, p, seed=seed)
+    ns = [100 * p + 7 * j for j in range(q)]
+    names = [f"t{j}" for j in range(q)]
+
+    def mk():
+        fleet = FleetScheduler(p, backend="jax")
+        for j in range(q):
+            fleet.admit(
+                JobSpec(name=names[j], n=ns[j], eps=1e-12, min_units=1),
+                models=[
+                    PiecewiseLinearFPM.from_points(m.as_points())
+                    for m in warm[j]
+                ],
+            )
+        return fleet
+
+    def times_for(ds, rng):
+        out = {}
+        for j, nm in enumerate(names):
+            x = np.asarray(ds[nm], dtype=np.float64)
+            t = x * base[j] * (
+                1.0 + np.where(x > knee[j], 3.0 * (x - knee[j]) / knee[j], 0.0)
+            )
+            t = np.where(x > 0, np.maximum(
+                t * (1.0 + 0.02 * rng.standard_normal(p)), 1e-12), 0.0)
+            out[nm] = [float(v) for v in t]
+        return out
+
+    on, off = mk(), mk()
+    rng_on = np.random.default_rng(seed + 9)
+    rng_off = np.random.default_rng(seed + 9)
+    on_times, off_times, ratios = [], [], []
+    for r in range(warmup + rounds):
+        obs.install(tel)
+        try:
+            t0 = time.perf_counter()
+            ds = on.rebalance()
+            on.observe(times_for(ds, rng_on))
+            t_on = time.perf_counter() - t0
+        finally:
+            obs.uninstall()
+        t0 = time.perf_counter()
+        ds = off.rebalance()
+        off.observe(times_for(ds, rng_off))
+        t_off = time.perf_counter() - t0
+        if r >= warmup:
+            on_times.append(t_on)
+            off_times.append(t_off)
+            ratios.append(t_off / t_on)
+    return {
+        "obs_q": q,
+        "obs_p": p,
+        "obs_enabled_round_ms": float(np.median(on_times) * 1e3),
+        "obs_disabled_round_ms": float(np.median(off_times) * 1e3),
+        "obs_speedup": float(np.median(ratios)),
+        "obs_events_recorded": len(tel.events),
+    }
+
+
 def _median_retry(measure, metric_key, threshold, attempts=3):
     """Flaky-guard for wall-clock gates: measure once; only when the gated
     metric misses ``threshold`` re-measure (``attempts`` total) and keep
@@ -604,6 +675,9 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true", help="CI smoke: parity gate + small sweep")
     ap.add_argument("--out", default="BENCH_fleet.json")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="export the obs-overhead regime's telemetry as a "
+                         "Chrome-trace JSON (open in chrome://tracing)")
     args = ap.parse_args(argv)
 
     if args.quick:
@@ -689,6 +763,31 @@ def main(argv=None) -> int:
             flush=True,
         )
 
+    # Telemetry overhead: ENABLED recording must stay within 2% of the
+    # disabled no-op on a serving epoch (flaky-guarded like every other
+    # wall-clock gate).  Quick mode runs it at the q=8 smoke row.
+    from repro import obs
+    from repro.obs.chrometrace import export_chrome_trace
+
+    oq, op = (8, 100) if args.quick else (16, 100)
+    obs_tel = obs.Telemetry(capacity=8192)
+    print(f"telemetry overhead (q={oq}, p={op}, enabled vs disabled) ...",
+          flush=True)
+    obs_row = _median_retry(
+        lambda a: obs_overhead_rounds(
+            oq, op, rounds=rounds, warmup=warmup,
+            seed=oq * 1000 + op + 5 + a, tel=obs_tel,
+        ),
+        "obs_speedup", 0.98,
+    )
+    print(f"  enabled {obs_row['obs_enabled_round_ms']:.2f} ms vs disabled "
+          f"{obs_row['obs_disabled_round_ms']:.2f} ms "
+          f"({obs_row['obs_speedup']:.3f}x, "
+          f"{obs_row['obs_events_recorded']} events)", flush=True)
+    if args.trace:
+        export_chrome_trace(obs_tel, args.trace)
+        print(f"-> {args.trace}")
+
     coldstart = None
     if not args.quick:
         print("cold-start (p=1000, fresh subprocess, shared compilation "
@@ -745,6 +844,7 @@ def main(argv=None) -> int:
         "hier_parity_q4_p100": hier_ok,
         "bucket_q3_p50": bucket_ok,
         "sweep": rows,
+        "obs_overhead": obs_row,
     }
     if coldstart is not None:
         payload["coldstart"] = coldstart
@@ -765,6 +865,11 @@ def main(argv=None) -> int:
     if not bucket_ok:
         print("FAIL: lane buckets diverge from plain or recompile within "
               "a bucket at q=3->4, p=50")
+        rc = 1
+    if obs_row["obs_speedup"] < 0.98:
+        print(f"FAIL: ENABLED telemetry costs more than 2% of a serving "
+              f"epoch at q={obs_row['obs_q']}, p={obs_row['obs_p']} "
+              f"({obs_row['obs_speedup']:.3f}x vs >= 0.98x)")
         rc = 1
     for row in rows:
         if row.get("hier"):

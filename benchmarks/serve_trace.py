@@ -53,7 +53,18 @@ Acceptance gates (exit 1):
 
 Results are written to ``BENCH_serve.json``.
 
+``--trace out.json`` additionally runs the adaptive arm under a
+``repro.obs.FlightRecorder`` and writes a Chrome-trace/Perfetto JSON of the
+whole serving session (fleet rounds, rebalance/observe spans, straggler
+strike/verdict events, the canonical ``serve.rebalance_overhead_frac``
+gauge).  On a QUARANTINE verdict — or on any gate failure — the recorder
+dumps ``out.json.flightrec.json`` naming the incident replica and the
+strike evidence that convicted it.  The written trace is validated (parses,
+>= 1 fleet span per epoch, overhead gauge == the harness fraction); a
+validation failure exits 1 like any gate.
+
     PYTHONPATH=src python benchmarks/serve_trace.py [--quick] [--out FILE]
+        [--trace TRACE]
 """
 
 from __future__ import annotations
@@ -377,8 +388,18 @@ def run_reference_arm(cfg: TraceConfig, world: World, trace, *, oracle: bool):
     return stats.summary()
 
 
-def run_adaptive_arm(cfg: TraceConfig, world: World, trace):
-    """The repo's serving loop, end to end (see module docstring)."""
+def run_adaptive_arm(cfg: TraceConfig, world: World, trace,
+                     flight_path: Optional[str] = None):
+    """The repo's serving loop, end to end (see module docstring).
+
+    With ``flight_path`` set (and a ``FlightRecorder`` installed as the
+    active telemetry sink), per-epoch estimate snapshots feed the recorder
+    and a QUARANTINE verdict dumps the incident file immediately."""
+    from repro import obs
+
+    flight = obs.active() if flight_path is not None else None
+    if not isinstance(flight, obs.FlightRecorder):
+        flight = None
     stats = ArmStats(slo_s=slo_seconds(cfg), drift_window=cfg.drift_step[1:3])
     noise_rng = np.random.default_rng(cfg.seed + 1)
     registry = ProfileRegistry()
@@ -514,6 +535,13 @@ def run_adaptive_arm(cfg: TraceConfig, world: World, trace):
             counts += d
             busy += t
         stats.record(e, counts, busy)
+        if flight is not None:
+            flight.snapshot(f"epoch:{e}", {
+                "replicas": [int(r) for r in rids],
+                "busy_s": [float(b) for b in busy],
+                "allocations": {nm: [int(v) for v in d]
+                                for nm, d in ds.items()},
+            })
 
         t0 = time.perf_counter()
         acts = fleet.straggler_actions(times)  # pre-fold predictions
@@ -536,6 +564,22 @@ def run_adaptive_arm(cfg: TraceConfig, world: World, trace):
                 else:
                     wrong_replica_events += 1
             if act is StragglerAction.QUARANTINE:
+                if flight is not None:
+                    det = getattr(fleet, "detector", None)
+                    rows = [r for r in (det.history if det else []) if r[0] == i]
+                    flight.dump(
+                        flight_path,
+                        reason="quarantine",
+                        context={
+                            "replica": int(rid),
+                            "epoch": int(e),
+                            "strike_evidence": [
+                                {"d_units": int(du), "predicted": float(pr),
+                                 "observed": float(ob), "ratio": float(ra)}
+                                for _, du, pr, ob, ra in rows[-5:]
+                            ],
+                        },
+                    )
                 if rid == straggler_rid:
                     if reaction["quarantine_epoch"] is None:
                         reaction["quarantine_epoch"] = e
@@ -597,6 +641,9 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: short trace, gates only")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--trace", default=None, metavar="TRACE",
+                    help="write a Chrome-trace JSON of the adaptive arm "
+                         "(+ TRACE.flightrec.json on incidents)")
     args = ap.parse_args(argv)
 
     # benchmark-process only (NOT at import: the test suite imports this
@@ -611,7 +658,23 @@ def main(argv=None) -> int:
           f"{len(cfg.replicas)} replicas, seed={cfg.seed}", flush=True)
     static = run_reference_arm(cfg, world, trace, oracle=False)
     oracle = run_reference_arm(cfg, world, trace, oracle=True)
-    adaptive = run_adaptive_arm(cfg, world, trace)
+    tel = None
+    flight_path = None
+    if args.trace:
+        from repro import obs
+
+        flight_path = args.trace + ".flightrec.json"
+        # ring big enough to hold the whole session (the recorder bound
+        # matters for hours-long deployments, not a bounded benchmark)
+        tel = obs.FlightRecorder(capacity=200_000, snapshot_capacity=64)
+        obs.install(tel)
+    try:
+        adaptive = run_adaptive_arm(cfg, world, trace, flight_path=flight_path)
+    finally:
+        if tel is not None:
+            from repro import obs
+
+            obs.uninstall()
 
     for name, row in (("static", static), ("oracle", oracle),
                       ("adaptive", adaptive)):
@@ -661,6 +724,46 @@ def main(argv=None) -> int:
         print(f"FAIL(d): rebalance overhead "
               f"{g['rebalance_overhead_frac']:.4%} > {OVERHEAD_BOUND:.0%}")
         rc = 1
+
+    if tel is not None:
+        from repro.obs.chrometrace import export_chrome_trace
+
+        # The canonical overhead gauge is the harness's own full-session
+        # fraction (the paper's headline figure); the dispatcher's live
+        # "serve.split.*" gauges are the per-balance view of the same split.
+        tel.gauge("serve.rebalance_overhead_frac",
+                  float(adaptive["rebalance_overhead_frac"]))
+        if adaptive["reprofile_reaction_s"] is not None:
+            tel.gauge("serve.reaction_epochs",
+                      float(adaptive["reprofile_reaction_s"]) / cfg.dt)
+        export_chrome_trace(tel, args.trace)
+        with open(args.trace) as f:
+            parsed = json.load(f)  # must round-trip as valid JSON
+        fleet_spans = sum(
+            1 for ev in parsed.get("traceEvents", [])
+            if ev.get("ph") == "X" and ev.get("cat") == "fleet"
+        )
+        gauge = parsed.get("repro", {}).get("gauges", {}).get(
+            "serve.rebalance_overhead_frac"
+        )
+        print(f"trace: {len(parsed.get('traceEvents', []))} events, "
+              f"{fleet_spans} fleet spans over {cfg.epochs} epochs "
+              f"-> {args.trace}", flush=True)
+        if fleet_spans < cfg.epochs:
+            print(f"FAIL(trace): {fleet_spans} fleet spans < "
+                  f"{cfg.epochs} epochs (expected >= 1 per round)")
+            rc = 1
+        if gauge is None or abs(
+            gauge - adaptive["rebalance_overhead_frac"]
+        ) > 1e-12:
+            print(f"FAIL(trace): trace overhead gauge {gauge!r} != harness "
+                  f"fraction {adaptive['rebalance_overhead_frac']!r}")
+            rc = 1
+        if rc != 0:
+            tel.dump(flight_path, reason="gate-failure",
+                     context={"gates_ok": False})
+            print(f"-> {flight_path} (gate failure)")
+
     if rc == 0:
         print("all gates OK")
 

@@ -37,11 +37,17 @@ __all__ = [
 
 @dataclass
 class RoundLog:
-    """One DFPA round: the distribution sent out and the times gathered."""
+    """One DFPA round: the distribution sent out and the times gathered.
+
+    ``t_wall`` is the monotonic wall-clock timestamp the round was logged at
+    (the logging component's injectable clock; 0.0 when the producer does
+    not stamp).  Excluded from equality so replay comparisons stay
+    timestamp-agnostic."""
 
     d: List[int]
     times: List[float]
     wall_cost: float  # max(times) + modelled collective overhead
+    t_wall: float = field(default=0.0, compare=False)
 
 
 @dataclass
@@ -59,6 +65,7 @@ class FleetRoundLog:
     times: List[List[float]]  # per-(tenant, processor) slice times
     proc_busy: List[float]  # per-processor sum across tenants
     wall_cost: float  # max(proc_busy) + modelled collective overhead
+    t_wall: float = field(default=0.0, compare=False)  # see RoundLog.t_wall
 
 
 class Executor(Protocol):

@@ -59,6 +59,12 @@ from .partition import (
     _prep_unit_caps,
 )
 
+try:  # telemetry is optional: the solver runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+    def _obs_active():
+        return None
+
 __all__ = ["Hierarchy"]
 
 
@@ -314,7 +320,14 @@ class Hierarchy:
             if np.any((caps_arr[idx] > 0) & (sub.counts == 0)):
                 raise ValueError("empty FPM")
 
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t0 = tel.clock()
         shares, t_outer, gbank = self._outer_shares(n, caps_arr, min_units)
+        if rec:
+            t1 = tel.clock()
+            tel.span_at("hier.outer", t0, t1, groups=self.g, n=n)
 
         if self.backend == "jax":
             d_full = self._inner_jax(shares, caps_arr, min_units, completion, max_steps)
@@ -331,6 +344,9 @@ class Hierarchy:
                     completion=completion,
                 )
                 d_full[idx] = d_sub
+        if rec:
+            tel.span_at("hier.inner", t1, tel.clock(),
+                        groups=self.g, backend=self.backend)
         out = [int(v) for v in d_full]
         assert sum(out) == n
         return (out, float(t_outer)) if with_t else out
@@ -356,6 +372,12 @@ class Hierarchy:
         uncapped = bool(np.all(caps_arr >= n))
         key = "uncapped" if uncapped else caps_arr.tobytes()
         gbank = self._agg_cache.get(key)
+        tel = _obs_active()
+        if tel is not None and tel.enabled:
+            tel.counter(
+                "hier.agg_cache.hit" if gbank is not None
+                else "hier.agg_cache.miss"
+            )
         if gbank is None:
             caps_f = (
                 np.full(self.p, np.inf)

@@ -66,6 +66,11 @@ __all__ = [
 
 Models = Union[Sequence[SpeedModel], ModelBank]
 
+# Iteration count of the most recent host-side t* bisection (scalar or bank
+# kernel) — a telemetry tap read by SpeedStore.partition after a host solve.
+# The jax kernel runs its fixed-trip loop on device and does not report here.
+_LAST_BISECTION_STEPS: int = 0
+
 
 # ---------------------------------------------------------------------------
 # Internal kernels — the single implementation behind SpeedStore and the
@@ -162,7 +167,9 @@ def _partition_continuous_scalar(
         raise RuntimeError("could not bracket t*")
     lo = 0.0
     # Bisection: invariant total(lo) < n <= total(hi).
+    steps = 0
     for _ in range(max_steps):
+        steps += 1
         mid = 0.5 * (lo + hi)
         if _total_alloc(models, mid, caps) >= n:
             hi = mid
@@ -170,6 +177,8 @@ def _partition_continuous_scalar(
             lo = mid
         if hi - lo <= rel_tol * hi:
             break
+    global _LAST_BISECTION_STEPS
+    _LAST_BISECTION_STEPS = steps
     t_star = hi
     xs = [m.alloc_at_time(t_star, c) for m, c in zip(models, caps)]
     total = sum(xs)
@@ -206,7 +215,9 @@ def _partition_continuous_bank(
     else:  # pragma: no cover - guarded by the feasibility check above
         raise RuntimeError("could not bracket t*")
     lo = 0.0
+    steps = 0
     for _ in range(max_steps):
+        steps += 1
         mid = 0.5 * (lo + hi)
         if bank.total_alloc(mid, caps_arr) >= n:
             hi = mid
@@ -214,6 +225,8 @@ def _partition_continuous_bank(
             lo = mid
         if hi - lo <= rel_tol * hi:
             break
+    global _LAST_BISECTION_STEPS
+    _LAST_BISECTION_STEPS = steps
     t_star = hi
     xs = bank.alloc_at_time(t_star, caps_arr)
     total = float(xs.sum())

@@ -74,6 +74,12 @@ from .modelbank import ModelBank
 from .partition2d import _col_times, _flat_imbalance, _rebalance_widths
 from .speedstore import SpeedStore
 
+try:  # telemetry is optional: the scheduler runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+    def _obs_active():
+        return None
+
 __all__ = ["Policy", "Partition", "Scheduler"]
 
 
@@ -393,6 +399,10 @@ class Scheduler:
             if persist_caps:
                 self.caps = list(caps)
         mu = self.min_units if min_units is None else int(min_units)
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t0 = tel.clock()
         if self.groups is not None:
             if objective != "time" or energy_cap is not None:
                 raise ValueError("hierarchical scheduler: objective='time' only")
@@ -403,6 +413,10 @@ class Scheduler:
                 completion=self._completion_for(self.store),
                 objective=objective, energy_cap=energy_cap,
             )
+        if rec:
+            tel.span_at("scheduler.partition", t0, tel.clock(),
+                        n=n, objective=objective,
+                        hier=self.groups is not None)
         self.d = list(d)
         return self._flat_result(d, t_star, eps=self.eps if eps is None else eps)
 
@@ -484,6 +498,9 @@ class Scheduler:
             self._ema[key] = ema
             speeds[i], valid[i] = di / ema, True
         self.store.fold_in([float(di) for di in self.d], speeds, valid)
+        tel = _obs_active()
+        if tel is not None and tel.enabled:
+            tel.counter("scheduler.observe")
         if imbalance(times) <= self.eps:  # zero-allocation groups are ignored
             return False
         if self.groups is not None:
@@ -553,6 +570,9 @@ class Scheduler:
         if probe_budget is None:
             probe_budget = 2 * p
         probes_left = probe_budget
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        t_tune = tel.clock() if rec else 0.0
 
         def measure(d: List[int]) -> List[float]:
             times = executor.run(d)
@@ -588,6 +608,11 @@ class Scheduler:
             self.n_units = n
             self.d = list(d)
             self.eps = eps
+            if rec:
+                tel.span_at("scheduler.autotune", t_tune, tel.clock(),
+                            n=n, iterations=it, converged=bool(converged),
+                            imbalance=float(imb),
+                            probes_used=probe_budget - probes_left)
             return Partition(
                 allocations=list(d),
                 t_star=None,
@@ -657,6 +682,9 @@ class Scheduler:
         """Invalidate a group's estimate (keep only the freshest operating
         point so the partitioner stays feasible); the device carry is dropped
         and rebuilt lazily."""
+        tel = _obs_active()
+        if tel is not None and tel.enabled:
+            tel.event("scheduler.reprofile", group=int(group))
         m = self.store.models[group]
         if getattr(m, "num_points", 0) > 1:
             di = self.d[group] if self.d else 0

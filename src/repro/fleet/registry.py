@@ -76,7 +76,25 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.fpm import PiecewiseLinearFPM
 
+try:  # telemetry is optional: the registry runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+    def _obs_active():
+        return None
+
 __all__ = ["ProfileRegistry"]
+
+
+def _warn(message: str, *, stacklevel: int = 2, **attrs) -> None:
+    """``warnings.warn`` with a structured telemetry mirror: the warning
+    behaviour is byte-identical (same message, category, user-facing
+    stacklevel), but an installed sink also gets a ``registry.warning``
+    event carrying the machine-readable fields — so cold-start causes show
+    up in traces without scraping warning text."""
+    tel = _obs_active()
+    if tel is not None and tel.enabled:
+        tel.event("registry.warning", message=message, **attrs)
+    warnings.warn(message, UserWarning, stacklevel=stacklevel + 1)
 
 Point = Tuple[float, float]
 
@@ -171,11 +189,12 @@ class ProfileRegistry:
             return None
         ok = _valid_points(pts)
         if ok is None:
-            warnings.warn(
+            _warn(
                 f"profile registry entry ({device_class!r}, {workload!r}) is "
                 "malformed; ignoring it (cold start)",
-                UserWarning,
-                stacklevel=2,
+                kind="malformed_entry",
+                device_class=str(device_class),
+                workload=str(workload),
             )
             return None
         self._touch(key)
@@ -212,11 +231,12 @@ class ProfileRegistry:
             return None
         ok = _valid_points(pts)
         if ok is None:
-            warnings.warn(
+            _warn(
                 f"energy profile entry ({device_class!r}, {workload!r}) is "
                 "malformed; ignoring it",
-                UserWarning,
-                stacklevel=2,
+                kind="malformed_energy_entry",
+                device_class=str(device_class),
+                workload=str(workload),
             )
             return None
         return list(ok)
@@ -321,11 +341,12 @@ class ProfileRegistry:
         for e in raw:
             pts = _valid_points(e.get("points", []))
             if pts is None:
-                warnings.warn(
+                _warn(
                     f"skipping malformed registry entry "
                     f"({e.get('device_class')!r}, {e.get('workload')!r})",
-                    UserWarning,
-                    stacklevel=2,
+                    kind="malformed_state_entry",
+                    device_class=str(e.get("device_class")),
+                    workload=str(e.get("workload")),
                 )
                 continue
             key = (str(e["device_class"]), str(e["workload"]))
@@ -338,11 +359,12 @@ class ProfileRegistry:
         for e in state.get("energy_entries") or []:
             pts = _valid_points(e.get("points", []))
             if pts is None:
-                warnings.warn(
+                _warn(
                     f"skipping malformed energy registry entry "
                     f"({e.get('device_class')!r}, {e.get('workload')!r})",
-                    UserWarning,
-                    stacklevel=2,
+                    kind="malformed_state_energy_entry",
+                    device_class=str(e.get("device_class")),
+                    workload=str(e.get("workload")),
                 )
                 continue
             reg._energy[(str(e["device_class"]), str(e["workload"]))] = pts
@@ -363,25 +385,27 @@ class ProfileRegistry:
             with open(path) as f:
                 state = json.load(f)
         except FileNotFoundError:
-            warnings.warn(
+            _warn(
                 f"profile registry {path!r} not found; starting cold",
-                UserWarning,
-                stacklevel=2,
+                kind="not_found",
+                path=str(path),
             )
             return cls()
         except (OSError, json.JSONDecodeError) as e:
-            warnings.warn(
+            _warn(
                 f"profile registry {path!r} unreadable ({e}); starting cold",
-                UserWarning,
-                stacklevel=2,
+                kind="unreadable",
+                path=str(path),
+                error=str(e),
             )
             return cls()
         try:
             return cls.from_state(state)
         except (ValueError, KeyError, TypeError) as e:
-            warnings.warn(
+            _warn(
                 f"profile registry {path!r} malformed ({e}); starting cold",
-                UserWarning,
-                stacklevel=2,
+                kind="malformed",
+                path=str(path),
+                error=str(e),
             )
             return cls()

@@ -157,6 +157,25 @@ from ..core.partition import (
 from ..core.scheduler import Partition, Policy, _even, _probe_neighbour
 from .registry import ProfileRegistry
 
+try:  # telemetry is optional: the fleet runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+
+    def _obs_active():
+        return None
+
+
+def _jit_cache_sizes() -> Tuple[int, int]:
+    """(partition, fold) jit cache sizes — the recompile telemetry signal
+    (a lane-bucket admit that stays in its bucket must not move these)."""
+    from ..core import modelbank_jax as mbj
+
+    return (
+        mbj._partition_units_jit._cache_size(),
+        mbj._fold_in_jit._cache_size(),
+    )
+
+
 __all__ = ["JobSpec", "FleetScheduler"]
 
 
@@ -434,6 +453,55 @@ class FleetScheduler:
     def active_jobs(self) -> List[str]:
         return [n for n, j in self._jobs.items() if j.status != "done"]
 
+    def stats(self) -> Dict[str, int]:
+        """Public counter snapshot of the fleet session so far.
+
+        Keys (all monotonically non-decreasing ints):
+
+        * ``rounds`` — completed :meth:`observe`/:meth:`step` rounds;
+        * ``restacks`` — carry rebuilds (admit/retire/reprofile churn);
+        * ``device_dispatches`` — stacked solves actually dispatched;
+        * ``predispatches`` — pipelined solves launched ahead of the fold;
+        * ``stale_reads`` — speculative results CONSUMED (each one is a
+          pipeline hit: the round reused a pre-dispatched partition);
+        * ``speculation_hits`` — alias of ``stale_reads``;
+        * ``speculative_misses`` — pre-dispatched partitions discarded
+          because the fold or seen-set shifted under them.
+
+        A deterministic serving replay (warm models, no probe escapes)
+        reports ``speculative_misses == 0``.  When a telemetry sink is
+        installed, every key is also exported as a ``fleet.<key>`` gauge at
+        the end of each round."""
+        return {
+            "rounds": self.rounds,
+            "restacks": self.restacks,
+            "device_dispatches": self.device_dispatches,
+            "predispatches": self.predispatches,
+            "stale_reads": self.stale_reads,
+            "speculation_hits": self.stale_reads,
+            "speculative_misses": self.speculative_misses,
+        }
+
+    def _stats_gauges(self, tel) -> None:
+        for k, v in self.stats().items():
+            tel.gauge(f"fleet.{k}", v)
+
+    def _recompile_counters(self, tel, cs0: Tuple[int, int]) -> None:
+        """Emit jit-cache growth since ``cs0`` as recompile counters (a
+        lane-bucket admit that stays in its bucket must not move these)."""
+        cs1 = _jit_cache_sizes()
+        if cs1[0] > cs0[0]:
+            tel.counter("fleet.recompile.partition", cs1[0] - cs0[0])
+        if cs1[1] > cs0[1]:
+            tel.counter("fleet.recompile.fold", cs1[1] - cs0[1])
+
+    def _count(self, name: str) -> None:
+        """Bump a telemetry counter iff a sink is installed (hot-path safe:
+        two attribute reads when disabled, no allocation)."""
+        tel = _obs_active()
+        if tel is not None and tel.enabled:
+            tel.counter(name)
+
     def models(self, name: str) -> List[PiecewiseLinearFPM]:
         job = self._jobs[name]
         job.flush()
@@ -665,6 +733,11 @@ class FleetScheduler:
         jobs = list(self._jobs.values())
         if not any(j.status != "done" for j in jobs):
             return finished
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t_round = tel.clock()
+            cs0 = _jit_cache_sizes() if self._backend == "jax" else None
 
         # Phase 1: choose this round's distributions.  New jobs follow
         # autotune's initial rule (warm_start_d | warm repartition | even);
@@ -689,7 +762,12 @@ class FleetScheduler:
         # Phase 2: ONE stacked repartition for every job that needs one,
         # then the host-side seen-set / probe-escape logic per job.
         if to_repart:
+            if rec:
+                t0 = tel.clock()
             new_ds = self._repartition(to_repart)
+            if rec:
+                tel.span_at("fleet.partition", t0, tel.clock(),
+                            jobs=len(to_repart))
             for job, d_new in zip(to_repart, new_ds):
                 if job.status == "running":
                     key = tuple(d_new)
@@ -725,7 +803,12 @@ class FleetScheduler:
         if to_measure:
             names = [job.spec.name for job in to_measure]
             D = np.asarray([job.pending_d for job in to_measure], dtype=np.int64)
+            if rec:
+                t0 = tel.clock()
             T = np.asarray(executor.run_jobs(names, D), dtype=np.float64)
+            if rec:
+                tel.span_at("fleet.measure", t0, tel.clock(),
+                            jobs=len(to_measure))
             alpha = self._alpha if self._alpha is not None else getattr(executor, "alpha", 0.0)
             beta = self._beta if self._beta is not None else getattr(executor, "beta", 0.0)
 
@@ -738,7 +821,11 @@ class FleetScheduler:
                 Df, Tf = self._snap_grid(D.astype(np.float64), T, self.quantize)
             else:
                 Df, Tf = D.astype(np.float64), T
+            if rec:
+                t0 = tel.clock()
             self._fold(to_measure, Df, Tf)
+            if rec:
+                tel.span_at("fleet.fold", t0, tel.clock(), jobs=len(to_measure))
             for k, job in enumerate(to_measure):
                 d = job.pending_d
                 times = [float(v) for v in T[k]]
@@ -774,6 +861,13 @@ class FleetScheduler:
             # overlap next round's stacked repartition with the in-flight
             # fold and whatever host work the caller does between rounds
             self._predispatch_next()
+        if rec:
+            if cs0 is not None:
+                self._recompile_counters(tel, cs0)
+            tel.span_at("fleet.round", t_round, tel.clock(),
+                        round=self.rounds, measured=len(to_measure),
+                        finished=len(finished))
+            self._stats_gauges(tel)
         return finished
 
     def rebalance(
@@ -811,6 +905,11 @@ class FleetScheduler:
         ]
         if not targets:
             return {}
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t0 = tel.clock()
+            cs0 = _jit_cache_sizes() if self._backend == "jax" else None
         ds = self._repartition(targets)
         out = {}
         for job, d in zip(targets, ds):
@@ -824,6 +923,11 @@ class FleetScheduler:
             job.d = d
             out[job.spec.name] = list(d)
         self.rounds += 1
+        if rec:
+            if cs0 is not None:
+                self._recompile_counters(tel, cs0)
+            tel.span_at("fleet.rebalance", t0, tel.clock(), jobs=len(targets))
+            self._stats_gauges(tel)
         return out
 
     @staticmethod
@@ -884,6 +988,10 @@ class FleetScheduler:
             job.times = observed  # live view keeps the un-snapped walls
         if not jobs:
             return
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t0 = tel.clock()
         D = np.asarray(Ds, dtype=np.float64)
         T = np.asarray(Ts, dtype=np.float64)
         self._fold(jobs, D, T)
@@ -891,6 +999,9 @@ class FleetScheduler:
             job.pending_obs.append(([float(v) for v in d], [float(v) for v in t]))
             job.invalidate()
         self.rounds += 1
+        if rec:
+            tel.span_at("fleet.observe", t0, tel.clock(), jobs=len(jobs))
+            self._stats_gauges(tel)
         if self.pipeline:
             # overlap the in-flight fold with the NEXT epoch's stacked
             # repartition over every admitted tenant — the serving cycle's
@@ -962,6 +1073,9 @@ class FleetScheduler:
         the grid beside it, so keeping ``x == d[i]`` would preserve
         precisely the stale knot and discard every fresh one)."""
         i = int(i)
+        tel = _obs_active()
+        if tel is not None and tel.enabled:
+            tel.event("fleet.reprofile_replica", replica=i, jobs=len(self._jobs))
         for job in self._jobs.values():
             job.flush()
             # a reprofile takes effect immediately: the pre-reprofile stale
@@ -1252,6 +1366,15 @@ class FleetScheduler:
             if med > self.staleness_tol and self.registry.drop(
                 cls_, job.spec.workload
             ):
+                tel = _obs_active()
+                if tel is not None and tel.enabled:
+                    tel.event(
+                        "registry.stale_profile",
+                        device_class=cls_,
+                        workload=job.spec.workload,
+                        median_rel_err=float(med),
+                        tol=float(self.staleness_tol),
+                    )
                 warnings.warn(
                     f"stale warm profile ({cls_!r}, {job.spec.workload!r}): "
                     f"first measured round deviates {med:.0%} from the warm "
@@ -1352,6 +1475,7 @@ class FleetScheduler:
                     banks.extend([dummy] * (q_pad - len(names)))
             self._stacked = JaxModelBank.stack(banks, min_k=self.reserve_knots)
             self.restacks += 1
+            self._count("fleet.restack")
         self._stack_dirty = False
         return self._stacked
 
@@ -1398,6 +1522,10 @@ class FleetScheduler:
         ]
         if not priced:
             return ds
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if rec:
+            t_cap = tel.clock()
 
         def job_energy(job: _Job, d) -> float:
             e = job.ebank().time(np.asarray(d, dtype=np.float64))
@@ -1411,6 +1539,10 @@ class FleetScheduler:
             return float(act.max()) if act.size else 0.0
 
         if sum(job_energy(job, ds[k]) for k, job in priced) <= self.power_cap:
+            if rec:
+                tel.gauge("fleet.power_cap.theta", 1.0)
+                tel.span_at("fleet.power_cap", t_cap, tel.clock(),
+                            jobs=len(priced), feasible=True, capped=False)
             return ds
 
         # Per-job anchors: the time-optimal makespan (theta=1) and the pure
@@ -1438,14 +1570,17 @@ class FleetScheduler:
             return out, sum(job_energy(job, out[k]) for k, job in priced)
 
         d_hi, e_hi = solve(theta_hi)
+        theta_used, feasible = theta_hi, True
         if e_hi > self.power_cap:
             # No common stretch fits: best effort = pure energy-optimal.
             d_hi = dict(d_energy)
+            feasible = False
         else:
             lo, hi = 1.0, theta_hi
             d_lo, e_lo = solve(lo)
             if e_lo <= self.power_cap:
                 d_hi = d_lo  # the free lunch already fits
+                theta_used = 1.0
             else:
                 for _ in range(40):
                     mid = 0.5 * (lo + hi)
@@ -1454,6 +1589,11 @@ class FleetScheduler:
                         hi, d_hi = mid, d_mid
                     else:
                         lo = mid
+                theta_used = hi
+        if rec:
+            tel.gauge("fleet.power_cap.theta", float(theta_used))
+            tel.span_at("fleet.power_cap", t_cap, tel.clock(),
+                        jobs=len(priced), feasible=feasible, capped=True)
         out = [list(d) for d in ds]
         for k, _ in priced:
             out[k] = [int(v) for v in d_hi[k]]
@@ -1499,8 +1639,10 @@ class FleetScheduler:
                 ds = solve(lambda job: job._stale_bank)
                 if self._speculation_hits(jobs, ds):
                     self.stale_reads += 1
+                    self._count("fleet.stale_read")
                     return ds
                 self.speculative_misses += 1
+                self._count("fleet.speculative_miss")
             return solve(lambda job: job.bank())
         self._ensure_stack()
         carry = self._select_carry(jobs)
@@ -1526,11 +1668,13 @@ class FleetScheduler:
         if carry is not self._stacked:
             if self._speculation_hits(jobs, ds):
                 self.stale_reads += 1
+                self._count("fleet.stale_read")
                 return ds
             # speculation missed: recompute against the newest carry — the
             # overlapped stale program is discarded and the round pays the
             # same fresh partition sync would have, never more
             self.speculative_misses += 1
+            self._count("fleet.speculative_miss")
             n_arr, caps_arr, mu_arr, lanes_mask = self._stack_args(
                 jobs, self._stacked
             )
@@ -1663,6 +1807,7 @@ class FleetScheduler:
         )
         self.device_dispatches += 1
         self.predispatches += 1
+        self._count("fleet.predispatch")
         self._predispatched = {
             "carry": carry,
             "fingerprint": self._repart_fingerprint(jobs),
@@ -1714,8 +1859,10 @@ class FleetScheduler:
                 ds = solve(lambda job: job._stale_bank, False)
                 if self._speculation_hits(jobs, ds):
                     self.stale_reads += 1
+                    self._count("fleet.stale_read")
                     return ds
                 self.speculative_misses += 1
+                self._count("fleet.speculative_miss")
             return solve(lambda job: job.bank(), False)
 
         self._ensure_stack()
@@ -1752,8 +1899,10 @@ class FleetScheduler:
         if carry is not self._stacked:
             if self._speculation_hits(jobs, out):
                 self.stale_reads += 1
+                self._count("fleet.stale_read")
                 return out
             self.speculative_misses += 1
+            self._count("fleet.speculative_miss")
             out = solve_on(self._stacked)
         return out
 

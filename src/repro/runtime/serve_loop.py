@@ -38,7 +38,7 @@ from __future__ import annotations
 import functools
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +47,12 @@ from ..core.executor import Executor, FleetRoundLog, RoundLog
 from ..core.scheduler import Partition, Policy, Scheduler
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, init_cache, prefill
+
+try:  # telemetry is optional: serving runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+    def _obs_active():
+        return None
 
 __all__ = ["ServeEngine", "ReplicaDispatcher"]
 
@@ -113,10 +119,15 @@ class ReplicaDispatcher:
     replica_run: Callable[[int, int], float]
     num_replicas: int
     eps: float = 0.1
-    logs: List[object] = field(default_factory=list)  # RoundLog | FleetRoundLog
+    # The typed serving log: single-tenant rounds append RoundLog, fleet
+    # rounds append FleetRoundLog — both stamped with ``clock()`` at append
+    # time (``t_wall``), so post-hoc analysis can line rounds up against
+    # external events without the dispatcher having run under telemetry.
+    logs: List[Union[RoundLog, FleetRoundLog]] = field(default_factory=list)
     scheduler: Optional[Scheduler] = None
     fleet: object = None  # warm FleetScheduler session (balance_fleet)
     exec_host_s: float = 0.0  # host wall spent simulating/serving in run*()
+    clock: Callable[[], float] = time.monotonic  # injectable log timestamper
 
     @property
     def num_procs(self) -> int:
@@ -128,7 +139,9 @@ class ReplicaDispatcher:
             self.replica_run(i, int(x)) if x > 0 else 0.0 for i, x in enumerate(d)
         ]
         self.exec_host_s += time.perf_counter() - t0
-        self.logs.append(RoundLog(list(map(int, d)), times, max(times)))
+        self.logs.append(
+            RoundLog(list(map(int, d)), times, max(times), t_wall=self.clock())
+        )
         return times
 
     def run_jobs(self, names: Sequence[str], D):
@@ -163,8 +176,22 @@ class ReplicaDispatcher:
                 times=[[float(v) for v in row] for row in T],
                 proc_busy=[float(v) for v in busy],
                 wall_cost=float(busy.max()) if len(out) else 0.0,
+                t_wall=self.clock(),
             )
         )
+        tel = _obs_active()
+        if tel is not None and tel.enabled and len(out):
+            # Per-replica busy windows on per-replica tracks, laid out on the
+            # SIMULATED serving timeline (epochs back to back) so the trace
+            # viewer shows each replica's time-sliced load per epoch.
+            if not hasattr(self, "_sim_t"):
+                self._sim_t = tel.clock()
+            t0_sim = self._sim_t
+            for i, b in enumerate(busy):
+                if b > 0:
+                    tel.span_at("serve.replica_busy", t0_sim, t0_sim + float(b),
+                                track=f"replica:{i}", tenants=len(names))
+            self._sim_t = t0_sim + float(busy.max())
         return T
 
     def round_cost(self, times: Sequence[float]) -> float:
@@ -289,4 +316,24 @@ class ReplicaDispatcher:
                         **kw,
                     )
                 )
-        return fleet.run(self)
+        tel = _obs_active()
+        rec = tel is not None and tel.enabled
+        if not rec:
+            return fleet.run(self)
+        # The live rebalance-vs-serve wall split: everything fleet.run spends
+        # outside the dispatcher's own replica_run calls is scheduling host
+        # work (partition/fold/settle).  Exported per balance so a trace of
+        # a serving session shows the paper's overhead ratio evolving live
+        # (the canonical end-of-run "serve.rebalance_overhead_frac" gauge is
+        # set by the harness from its full-session accounting).
+        t0 = time.perf_counter()
+        eh0 = self.exec_host_s
+        out = fleet.run(self)
+        total = time.perf_counter() - t0
+        serve_s = self.exec_host_s - eh0
+        sched_s = max(total - serve_s, 0.0)
+        tel.gauge("serve.split.serve_host_s", serve_s)
+        tel.gauge("serve.split.sched_host_s", sched_s)
+        if serve_s > 0:
+            tel.gauge("serve.split.sched_over_serve", sched_s / serve_s)
+        return out

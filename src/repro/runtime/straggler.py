@@ -25,6 +25,12 @@ import numpy as np
 from ..core.fpm import PiecewiseLinearFPM
 from ..core.modelbank import ModelBank
 
+try:  # telemetry is optional: detection runs identically without repro.obs
+    from ..obs.telemetry import active as _obs_active
+except ImportError:  # pragma: no cover - obs layer absent
+    def _obs_active():
+        return None
+
 __all__ = ["StragglerAction", "StragglerDetector"]
 
 
@@ -121,10 +127,38 @@ class StragglerDetector:
         self.strikes[group] = s
         if s >= self.patience_hard:
             self.strikes[group] = 0
+            self._report(group, ratio, s, StragglerAction.QUARANTINE)
             return StragglerAction.QUARANTINE
         if s >= self.patience:
+            self._report(group, ratio, s, StragglerAction.REPROFILE)
             return StragglerAction.REPROFILE
+        self._report(group, ratio, s, StragglerAction.NONE)
         return StragglerAction.NONE
+
+    def _report(
+        self, group: int, ratio: float, strikes: int, verdict: StragglerAction
+    ) -> None:
+        """Mirror a strike (and its verdict, if any) into telemetry with the
+        (predicted, observed) evidence from the matching history row."""
+        tel = _obs_active()
+        if tel is None or not tel.enabled:
+            return
+        evidence = {}
+        if self.history and self.history[-1][0] == group:
+            _, d_units, predicted, observed, _ = self.history[-1]
+            evidence = {
+                "d_units": int(d_units),
+                "predicted": float(predicted),
+                "observed": float(observed),
+            }
+        tel.counter("straggler.strike")
+        tel.event("straggler.strike", group=int(group), ratio=float(ratio),
+                  strikes=int(strikes), **evidence)
+        if verdict is not StragglerAction.NONE:
+            tel.counter(f"straggler.{verdict.value}")
+            tel.event("straggler.verdict", group=int(group),
+                      action=verdict.value, ratio=float(ratio),
+                      strikes=int(strikes), **evidence)
 
     def reprofile(self, controller, group: int) -> None:
         """Invalidate a group's FPM (keep only the freshest operating point
